@@ -1,0 +1,30 @@
+"""Paper Fig. 15/16 — bandwidth utilization: per-sub-layer averages for
+CAIS-Base / CAIS-Partial / CAIS, and the L2 utilization-over-time trace."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import perfsim as ps
+
+
+def run() -> None:
+    f = ps.calibrated_fabric()
+    # Fig 15: average useful-byte utilization per sub-layer
+    for which in ("L1", "L2", "L3", "L4"):
+        for pol in ("CAIS-Base", "CAIS-Partial", "CAIS"):
+            mk, busy = ps.run_sublayer(ps.LLAMA_7B, ps.BASELINES[pol], f,
+                                       which=which)
+            u = ps.useful_utilization(ps.BASELINES[pol], busy, mk)
+            emit(f"fig15.LLaMA-7B.{which}.{pol}", mk * 1e6,
+                 f"bw_util={100 * u:.1f}%")
+
+    # Fig 16: utilization over time for L2
+    for pol in ("CAIS-Base", "CAIS-Partial", "CAIS"):
+        mk, busy = ps.run_sublayer(ps.LLAMA_7B, ps.BASELINES[pol], f, "L2")
+        tr = ps.trace(busy, mk, bins=20)
+        scale = 1.0 / ps.BASELINES[pol].traffic_mult
+        series = " ".join(f"{100 * v * scale:.0f}" for v in tr)
+        emit(f"fig16.LLaMA-7B.L2.trace.{pol}", mk * 1e6, f"util%=[{series}]")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Paper Fig. 11 — end-to-end speedup of CAIS over the nine baselines,
+per Table-I model, training and inference (prefill), from the calibrated
+fabric model. Emits ours vs the paper's reported geomeans."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import perfsim as ps
+
+
+def run() -> None:
+    f = ps.calibrated_fabric()
+    tbl = ps.speedup_table(f=f)
+    for model_name, row in tbl.items():
+        t_cais = ps.run_model(ps.PAPER_MODELS[[m.name for m in
+                              ps.PAPER_MODELS].index(model_name)],
+                              ps.BASELINES["CAIS"], f)
+        for baseline, speedup in row.items():
+            emit(f"fig11.{model_name}.CAIS_over_{baseline}",
+                 t_cais * 1e6, f"speedup={speedup:.2f}x")
+    gm = {b: ps.geomean(tbl[m][b] for m in tbl)
+          for b in next(iter(tbl.values()))}
+    for b, v in gm.items():
+        paper = ps.PAPER_GEOMEANS_TRAIN.get(b)
+        emit(f"fig11.geomean.CAIS_over_{b}", 0.0,
+             f"ours={v:.2f}x paper={paper if paper else 'n/a'}x")
+
+
+if __name__ == "__main__":
+    run()

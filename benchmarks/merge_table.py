@@ -1,0 +1,45 @@
+"""Paper Fig. 13/14 — staging-buffer (merge-table analogue) requirements and
+performance sensitivity.
+
+Fig. 13(a): minimum per-step staging bytes needed per sub-layer payload,
+with coordination (our chunk scheduler picks num_chunks) vs without (the
+whole shard is in flight — the uncoordinated 250 KB/port regime).
+Fig. 14: end-to-end time vs staging-buffer size for coordinated (CAIS) and
+uncoordinated (CAIS-Base) schedules."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import coordination as coord
+from repro.core import perfsim as ps
+
+
+def run() -> None:
+    f = ps.calibrated_fabric()
+    # Fig 13(a): staging bytes per sub-layer across the three models
+    for cfg in ps.PAPER_MODELS:
+        m = cfg.batch * cfg.seq * cfg.hidden * cfg.dtype_bytes
+        plan = coord.plan(m, ring=f.n)
+        uncoord = coord.schedule_metrics(m, f.n, num_chunks=1)
+        emit(f"fig13.{cfg.name}.staging_coordinated", 0.0,
+             f"bytes={plan.staging_bytes} chunks={plan.num_chunks}")
+        emit(f"fig13.{cfg.name}.staging_uncoordinated", 0.0,
+             f"bytes={uncoord.staging_bytes}")
+        emit(f"fig13.{cfg.name}.reduction", 0.0,
+             f"{100 * (1 - plan.staging_bytes / uncoord.staging_bytes):.0f}%")
+
+    # Fig 14: performance vs buffer size (more chunks = smaller buffer)
+    for chunks in (1, 2, 4, 8, 16, 32):
+        m = ps.LLAMA_7B.batch * ps.LLAMA_7B.seq * ps.LLAMA_7B.hidden * 2
+        staging = int(m / f.n / chunks)
+        t_cais = ps.run_model(ps.LLAMA_7B, ps.BASELINES["CAIS"], f,
+                              chunks=chunks)
+        t_base = ps.run_model(ps.LLAMA_7B, ps.BASELINES["CAIS-Base"], f,
+                              chunks=chunks)
+        emit(f"fig14.LLaMA-7B.staging_{staging}B.CAIS", t_cais * 1e6,
+             f"chunks={chunks}")
+        emit(f"fig14.LLaMA-7B.staging_{staging}B.CAIS-Base", t_base * 1e6,
+             f"chunks={chunks} slowdown={t_base / t_cais:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,86 @@
+"""Wall-clock microbench of the real JAX CAIS primitives vs barrier
+collectives on an 8-virtual-device ring (subprocess — the parent keeps one
+device). CPU timings are NOT TPU predictions; the derived column carries the
+structural evidence (HLO collective census) alongside."""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+_CHILD = "_REPRO_PRIM_BENCH_CHILD"
+
+
+def _child() -> None:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from benchmarks.common import emit, time_fn
+    from repro.core import primitives as prim
+    from repro.core.primitives import CAISConfig
+
+    ax = (jax.sharding.AxisType.Auto,)
+    mesh = jax.make_mesh((8,), ("model",), axis_types=ax)
+    B, S, d, F = 4, 2048, 512, 512
+    x = jax.random.normal(jax.random.key(0), (B, S, d), jnp.bfloat16)
+    w = jax.random.normal(jax.random.key(1), (d, F), jnp.bfloat16)
+
+    def census(fn, in_specs, out_specs, *args):
+        txt = jax.jit(jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False)).lower(*args).compile().as_text()
+        return {k: len(re.findall(rf"= \S+ {k}\(", txt))
+                for k in ("all-gather", "reduce-scatter", "all-reduce",
+                          "collective-permute")}
+
+    cais = CAISConfig(num_chunks=4, bidirectional=True)
+    cases = [
+        ("ag_gemm.barrier",
+         lambda a, b: prim.barrier_ag_gemm(a, b, "model"),
+         (P(None, "model", None), P(None, "model")), P(None, None, "model"),
+         (x, w)),
+        ("ag_gemm.cais",
+         lambda a, b: prim.ag_gemm(a, b, "model", cais),
+         (P(None, "model", None), P(None, "model")), P(None, None, "model"),
+         (x, w)),
+        ("gemm_rs.barrier",
+         lambda a, b: prim.barrier_gemm_rs(a, b, "model"),
+         (P(None, None, "model"), P("model", None)), P(None, "model", None),
+         (x, w)),
+        ("gemm_rs.cais",
+         lambda a, b: prim.gemm_rs(a, b, "model", cais),
+         (P(None, None, "model"), P("model", None)), P(None, "model", None),
+         (x, w)),
+    ]
+    for name, fn, ins, outs, args in cases:
+        jitted = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=ins,
+                                       out_specs=outs, check_vma=False))
+        us = time_fn(jitted, *args)
+        c = census(fn, ins, outs, *args)
+        emit(f"prim.{name}", us,
+             f"hlo:ag={c['all-gather']} rs={c['reduce-scatter']} "
+             f"ar={c['all-reduce']} cp={c['collective-permute']}")
+
+
+def run() -> None:
+    if os.environ.get(_CHILD):
+        _child()
+        return
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env[_CHILD] = "1"
+    env.setdefault("PYTHONPATH", "src")
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "from benchmarks.primitives_bench import run; run()"],
+        capture_output=True, text=True, env=env, timeout=1200)
+    sys.stdout.write(out.stdout)
+    if out.returncode != 0:
+        sys.stderr.write(out.stderr[-2000:])
+        raise RuntimeError("primitives bench failed")
+
+
+if __name__ == "__main__":
+    run()

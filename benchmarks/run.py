@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §7).
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig2    motivation: comm vs comp while scaling up      (scalability.py)
+  fig11   e2e speedups over 9 baselines                  (e2e_speedup.py)
+  fig12   sub-layer L1–L4 speedups                       (sublayer.py)
+  fig13/14 merge-table/staging sensitivity               (merge_table.py)
+  fig15/16 bandwidth utilization                         (bandwidth.py)
+  fig17/tab2 scalability + scaled-down validation        (scalability.py)
+  prim    real JAX primitive timings + HLO census        (primitives_bench.py)
+  roofline three-term table from the dry-run artifacts   (roofline_report.py)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bandwidth, e2e_speedup, merge_table,
+                            primitives_bench, roofline_report, scalability,
+                            sublayer)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (e2e_speedup, sublayer, merge_table, bandwidth, scalability,
+                primitives_bench, roofline_report):
+        try:
+            mod.run()
+        except Exception:
+            failures += 1
+            print(f"{mod.__name__}.FAILED,0,", file=sys.stdout)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,53 @@
+"""Paper Fig. 17 — per-device throughput vs device count (weak scaling:
+hidden dims grow with the ring, as the paper does) for CAIS and
+CoCoNet-NVLS. Plus Table-II style scaled-down validation and Fig. 2
+motivation (comm vs comp when scaling up)."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit
+from repro.core import perfsim as ps
+
+
+def run() -> None:
+    f8 = ps.calibrated_fabric()
+
+    # ---- Fig 17: weak scaling 8 -> 32 ----
+    base_rate = {}
+    for n in (8, 16, 32):
+        cfg = dataclasses.replace(
+            ps.LLAMA_7B, hidden=ps.LLAMA_7B.hidden * n // 8,
+            ffn_hidden=ps.LLAMA_7B.ffn_hidden * n // 8)
+        f = dataclasses.replace(f8, n=n)
+        for pol in ("CAIS", "CoCoNet-NVLS"):
+            t = ps.run_model(cfg, ps.BASELINES[pol], f)
+            rate = n / t  # work grows ∝ n ⇒ per-device throughput ∝ n/t
+            base_rate.setdefault(pol, rate)
+            emit(f"fig17.{pol}.n{n}", t * 1e6,
+                 f"per_device_throughput={100 * rate / base_rate[pol]:.1f}%")
+
+    # ---- Table II: scaled-down validation (full vs half config) ----
+    full = dataclasses.replace(ps.LLAMA_7B, hidden=8192, ffn_hidden=22528)
+    half = dataclasses.replace(ps.LLAMA_7B, hidden=4096, ffn_hidden=11264)
+    f_full = f8
+    f_half = dataclasses.replace(f8, peak=f8.peak / 2)  # 50% SMs
+    for name, cfg, fab in (("full", full, f_full), ("half", half, f_half)):
+        t_cais = ps.run_model(cfg, ps.BASELINES["CAIS"], fab)
+        t_tp = ps.run_model(cfg, ps.BASELINES["TP-NVLS"], fab)
+        emit(f"tab2.{name}.CAIS_over_TP-NVLS", t_cais * 1e6,
+             f"speedup={t_tp / t_cais:.2f}x (paper: full 1.43, half 1.40)")
+
+    # ---- Fig 2: comm/comp when scaling up (strong scaling of LLaMA-7B) ----
+    for n in (2, 4, 8, 16, 32):
+        f = dataclasses.replace(f8, n=n)
+        comp = ps.run_model(ps.LLAMA_7B, ps.BASELINES["TP-NVLS"],
+                            dataclasses.replace(f, bw=1e30))
+        tot = ps.run_model(ps.LLAMA_7B, ps.BASELINES["TP-NVLS"], f)
+        comm = tot - comp
+        emit(f"fig2.LLaMA-7B.n{n}", tot * 1e6,
+             f"comm/comp={comm / comp:.2f}")
+
+
+if __name__ == "__main__":
+    run()

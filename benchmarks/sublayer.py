@@ -1,0 +1,22 @@
+"""Paper Fig. 12 — sub-layer (L1–L4) speedups of CAIS over each baseline."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import perfsim as ps
+
+
+def run() -> None:
+    f = ps.calibrated_fabric()
+    for cfg in ps.PAPER_MODELS:
+        for which in ("L1", "L2", "L3", "L4"):
+            t_cais, _ = ps.run_sublayer(cfg, ps.BASELINES["CAIS"], f, which)
+            for name in ("TP-NVLS", "SP-NVLS", "CoCoNet", "FuseLib", "T3",
+                         "CoCoNet-NVLS", "FuseLib-NVLS", "T3-NVLS", "LADM",
+                         "CAIS-Base"):
+                t, _ = ps.run_sublayer(cfg, ps.BASELINES[name], f, which)
+                emit(f"fig12.{cfg.name}.{which}.CAIS_over_{name}",
+                     t_cais * 1e6, f"speedup={t / t_cais:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

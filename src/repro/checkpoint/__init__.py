@@ -1,0 +1,3 @@
+from repro.checkpoint.store import AsyncSaver, latest_step, restore, save
+
+__all__ = ["AsyncSaver", "save", "restore", "latest_step"]

@@ -1,0 +1,19 @@
+from repro.configs.base import (
+    ArchConfig,
+    EncoderConfig,
+    MLAConfig,
+    MoEConfig,
+    RGLRUConfig,
+    SHAPES,
+    SHAPES_BY_NAME,
+    SSMConfig,
+    ShapeConfig,
+    shape_applicable,
+)
+from repro.configs.registry import ARCHS, get_arch, list_archs
+
+__all__ = [
+    "ArchConfig", "EncoderConfig", "MLAConfig", "MoEConfig", "RGLRUConfig",
+    "SSMConfig", "ShapeConfig", "SHAPES", "SHAPES_BY_NAME",
+    "shape_applicable", "ARCHS", "get_arch", "list_archs",
+]

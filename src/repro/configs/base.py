@@ -1,0 +1,227 @@
+"""Architecture / shape configuration for the CAIS-on-TPU framework.
+
+Every assigned architecture is expressed as an :class:`ArchConfig`; shapes
+(training / prefill / decode / long-context) are :class:`ShapeConfig`.
+The model zoo in ``repro.models`` builds purely from these dataclasses —
+no arch-specific code paths outside of the block types declared here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Sub-configs for block families
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3 style)."""
+
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Capacity-bounded top-k MoE (GShard-style dispatch, EP over `model`)."""
+
+    num_experts: int = 8
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    # Arctic: a small dense FFN runs in parallel (residual) with the MoE.
+    dense_residual_d_ff: int = 0
+    # Token group size for dispatch einsum (bounds the one-hot tensor).
+    group_size: int = 512
+    router_jitter: float = 0.0
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 SSD (state-space duality, chunked dual form)."""
+
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    chunk_size: int = 256
+    conv_width: int = 4
+    n_groups: int = 1
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """RG-LRU recurrent block (RecurrentGemma / Griffin)."""
+
+    lru_width: int = 2560
+    conv_width: int = 4
+    block_width: int = 0  # 0 => d_model
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Encoder stack for enc-dec archs (whisper). Frontend is a stub: the
+    input_specs provide precomputed frame embeddings (B, T_enc, d_model)."""
+
+    num_layers: int = 4
+    max_source_len: int = 1500
+
+
+# ---------------------------------------------------------------------------
+# ArchConfig
+# ---------------------------------------------------------------------------
+
+# Block kinds usable in `layer_pattern`:
+#   "attn"    — full (causal) GQA/MQA attention
+#   "swa"     — sliding-window attention (window = cfg.window)
+#   "mla"     — multi-head latent attention
+#   "ssm"     — Mamba-2 SSD mixer
+#   "rglru"   — RG-LRU recurrent mixer
+BLOCK_KINDS = ("attn", "swa", "mla", "ssm", "rglru")
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 => d_model // num_heads
+
+    # Per-layer mixer pattern, cycled over `num_layers`
+    # e.g. ("swa",)*5 + ("attn",) for gemma3's 5 local : 1 global.
+    layer_pattern: Tuple[str, ...] = ("attn",)
+    window: int = 0  # sliding window for "swa" blocks
+
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+
+    # enc-dec (whisper): decoder fields above; encoder stack below.
+    encoder: Optional[EncoderConfig] = None
+    # vlm (paligemma): number of prefix image tokens provided by the stub
+    # frontend via input_specs (precomputed patch embeddings).
+    num_prefix_tokens: int = 0
+    vision_width: int = 0  # width of stub patch embeddings (projected in)
+
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    act: str = "silu"  # silu (gated) | gelu (gated) | gelu_mlp (non-gated)
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = True
+    logits_softcap: float = 0.0
+
+    # Whether the arch is eligible for the long_500k shape (sub-quadratic /
+    # bounded-KV attention). Pure full-attention archs skip it (DESIGN.md §5).
+    sub_quadratic: bool = False
+    # Optimizer default (huge MoE archs use adafactor — DESIGN.md §6).
+    optimizer: str = "adamw"
+
+    # ----- derived -----
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def is_enc_dec(self) -> bool:
+        return self.encoder is not None
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Full per-layer block-kind list of length num_layers."""
+        pat = self.layer_pattern
+        kinds = tuple(pat[i % len(pat)] for i in range(self.num_layers))
+        for k in kinds:
+            assert k in BLOCK_KINDS, k
+        return kinds
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks), for roofline's
+        MODEL_FLOPS = 6·N·D."""
+        from repro.models.counting import arch_param_count
+
+        return arch_param_count(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.counting import arch_param_count
+
+        return arch_param_count(self, active_only=True)
+
+    def scaled(self, **overrides) -> "ArchConfig":
+        return dataclasses.replace(self, **overrides)
+
+    def smoke(self) -> "ArchConfig":
+        """Reduced config of the same family for CPU smoke tests."""
+        kw = dict(
+            num_layers=max(2, len(self.layer_pattern)),
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads > 1 else 1,
+            head_dim=16,
+            d_ff=128,
+            vocab_size=256,
+            window=min(self.window, 8) if self.window else 0,
+        )
+        if self.mla:
+            kw["mla"] = MLAConfig(
+                q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=8,
+                qk_rope_head_dim=8, v_head_dim=8)
+        if self.moe:
+            kw["moe"] = dataclasses.replace(
+                self.moe, num_experts=min(self.moe.num_experts, 4),
+                group_size=16,
+                dense_residual_d_ff=64 if self.moe.dense_residual_d_ff else 0)
+        if self.ssm:
+            kw["ssm"] = SSMConfig(d_state=16, head_dim=16, expand=2,
+                                  chunk_size=8, conv_width=4)
+        if self.rglru:
+            kw["rglru"] = RGLRUConfig(lru_width=64, conv_width=4)
+        if self.encoder:
+            kw["encoder"] = EncoderConfig(num_layers=2, max_source_len=16)
+        if self.num_prefix_tokens:
+            kw["num_prefix_tokens"] = 4
+            kw["vision_width"] = 32
+        return self.scaled(**kw)
+
+
+# ---------------------------------------------------------------------------
+# ShapeConfig — the assigned input-shape set
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def shape_applicable(arch: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch × shape) cell runs, and the reason if skipped.
+
+    Per the assignment: long_500k needs sub-quadratic attention — skipped for
+    pure full-attention archs (noted in DESIGN.md §5); encoder-only archs have
+    no decode step (none of our 10 are encoder-only: whisper's decoder
+    decodes)."""
+    if shape.name == "long_500k" and not arch.sub_quadratic:
+        return False, ("pure full-attention arch: 500k-token KV cache is "
+                       "unbounded (DESIGN.md §5)")
+    return True, ""

@@ -1,0 +1,36 @@
+"""gemma3-1b — assigned architecture config.
+
+[dense] gemma3-1b — 5:1 local:global, 128k [hf:google/gemma-3-1b-pt;
+unverified]. 26L d_model=1152 4H (GQA kv=1) d_ff=6912 vocab=262144
+"""
+from repro.configs.base import (
+    ArchConfig,
+    EncoderConfig,
+    MLAConfig,
+    MoEConfig,
+    RGLRUConfig,
+    SSMConfig,
+)
+
+GEMMA3_1B = ArchConfig(
+    name="gemma3-1b",
+    family="dense",
+    num_layers=26,
+    d_model=1152,
+    num_heads=4,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab_size=262_144,
+    layer_pattern=("swa",) * 5 + ("attn",),  # 5 local : 1 global
+    window=512,
+    norm="rmsnorm",
+    act="gelu",
+    rope_theta=1_000_000.0,  # global layers (local layers use 10k upstream)
+    tie_embeddings=True,
+    # Hybrid local:global — long_500k runs with context-parallel KV for the
+    # 4 global layers (~2.6 GB total at 500k) and window-bounded local KV.
+    sub_quadratic=True,
+)
+
+CONFIG = GEMMA3_1B

@@ -1,0 +1,45 @@
+"""Assigned architecture registry.
+
+One module per architecture under ``repro.configs.<arch_id>`` (dashes →
+underscores); this registry collects them for ``--arch <id>`` selection.
+Each module records [source; verified-tier] in its docstring.
+"""
+from __future__ import annotations
+
+from repro.configs.arctic_480b import ARCTIC_480B
+from repro.configs.base import ArchConfig
+from repro.configs.deepseek_7b import DEEPSEEK_7B
+from repro.configs.gemma3_1b import GEMMA3_1B
+from repro.configs.internlm2_1_8b import INTERNLM2_1_8B
+from repro.configs.mamba2_130m import MAMBA2_130M
+from repro.configs.minicpm3_4b import MINICPM3_4B
+from repro.configs.mixtral_8x7b import MIXTRAL_8X7B
+from repro.configs.paligemma_3b import PALIGEMMA_3B
+from repro.configs.recurrentgemma_2b import RECURRENTGEMMA_2B
+from repro.configs.whisper_tiny import WHISPER_TINY
+
+ARCHS = {
+    a.name: a
+    for a in (
+        PALIGEMMA_3B,
+        MAMBA2_130M,
+        WHISPER_TINY,
+        DEEPSEEK_7B,
+        INTERNLM2_1_8B,
+        GEMMA3_1B,
+        MINICPM3_4B,
+        RECURRENTGEMMA_2B,
+        MIXTRAL_8X7B,
+        ARCTIC_480B,
+    )
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def list_archs():
+    return sorted(ARCHS)

@@ -1,0 +1,32 @@
+"""whisper-tiny — assigned architecture config.
+
+[audio] whisper-tiny — enc-dec, conv frontend (stub) [arXiv:2212.04356;
+unverified]. 4L d_model=384 6H (GQA kv=6) d_ff=1536 vocab=51865
+"""
+from repro.configs.base import (
+    ArchConfig,
+    EncoderConfig,
+    MLAConfig,
+    MoEConfig,
+    RGLRUConfig,
+    SSMConfig,
+)
+
+WHISPER_TINY = ArchConfig(
+    name="whisper-tiny",
+    family="audio",
+    num_layers=4,            # decoder layers
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51_865,
+    layer_pattern=("attn",),
+    encoder=EncoderConfig(num_layers=4, max_source_len=1500),
+    norm="layernorm",
+    act="gelu_mlp",          # whisper uses non-gated GELU MLP
+    tie_embeddings=True,
+    sub_quadratic=False,
+)
+
+CONFIG = WHISPER_TINY

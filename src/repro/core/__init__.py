@@ -1,0 +1,22 @@
+"""CAIS-on-TPU core: compute-aware collective-fused TP schedules (the
+paper's primary contribution), the chunk-coordination scheduler, the
+graph-level dataflow optimizer, and the calibrated fabric model."""
+from repro.core.primitives import (
+    CAISConfig,
+    ag_gemm,
+    ag_gemm_multi,
+    barrier_ag_gemm,
+    barrier_gemm_ar,
+    barrier_gemm_rs,
+    fused_rs_ln_ag,
+    gemm_ar,
+    gemm_rs,
+    overlap_asymmetric,
+    ring_all_gather,
+)
+
+__all__ = [
+    "CAISConfig", "ag_gemm", "ag_gemm_multi", "barrier_ag_gemm",
+    "barrier_gemm_ar", "barrier_gemm_rs", "fused_rs_ln_ag", "gemm_ar",
+    "gemm_rs", "overlap_asymmetric", "ring_all_gather",
+]

@@ -1,0 +1,87 @@
+"""Chunk scheduling — the TPU analogue of the paper's merging-aware TB
+coordination (§III-B).
+
+On SPMD TPU the paper's *temporal alignment* problem is solved structurally:
+every chip runs the same program, so chunk k's permute is issued at the same
+program point everywhere (the 35 µs request skew of independently-scheduled
+TBs does not exist). What remains is the *resource* side of the same
+trade-off: the per-step staging buffer (our merge-table analogue) holds
+``payload / num_chunks`` bytes in flight, and the hop latency α plays the
+role of the merge-window — chunks too small make latency dominate (the
+analogue of early-arriving requests being evicted before their peers show
+up), chunks too big serialize compute behind communication.
+
+:func:`plan` picks ``num_chunks`` from the α-β model under a staging-bytes
+budget; :func:`schedule_metrics` evaluates any chunking (the Fig. 13/14
+sensitivity sweeps call it directly).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.hw import HWSpec, V5E
+
+
+@dataclass(frozen=True)
+class SchedulePlan:
+    num_chunks: int
+    staging_bytes: int          # per-step in-flight bytes (merge-table size)
+    step_time: float            # per ring-step wall time (s)
+    total_comm: float           # full ring traversal (s)
+    latency_fraction: float     # α / per-chunk time — merge-window pressure
+    overlap_efficiency: float   # fraction of wire time hideable behind compute
+
+
+def schedule_metrics(payload_bytes: float, ring: int, num_chunks: int,
+                     compute_time: float = 0.0,
+                     bidirectional: bool = True,
+                     hw: HWSpec = V5E) -> SchedulePlan:
+    """Evaluate one chunking choice.
+
+    payload_bytes: full (global) tensor bytes moved by the collective.
+    ring: TP axis size. compute_time: the GEMM time available to hide wire
+    time behind (0 = bare collective)."""
+    c = max(1, num_chunks)
+    dirs = 2 if bidirectional else 1
+    shard = payload_bytes / ring                  # bytes per device
+    chunk = shard / c                             # bytes per micro-chunk
+    wire_per_dir = chunk / dirs / hw.ici_bw
+    step_time = hw.hop_latency + wire_per_dir
+    steps = (ring - 1) * c
+    total = steps * step_time
+    per_chunk = hw.hop_latency + wire_per_dir
+    lat_frac = hw.hop_latency / per_chunk
+    if compute_time > 0:
+        hidden = min(total, compute_time)
+        eff = hidden / total if total > 0 else 1.0
+    else:
+        eff = 0.0
+    return SchedulePlan(
+        num_chunks=c,
+        staging_bytes=int(chunk),
+        step_time=step_time,
+        total_comm=total,
+        latency_fraction=lat_frac,
+        overlap_efficiency=eff,
+    )
+
+
+def plan(payload_bytes: float, ring: int, *, compute_time: float = 0.0,
+         staging_budget: int = 4 * 1024**2, max_latency_fraction: float = 0.25,
+         bidirectional: bool = True, hw: HWSpec = V5E) -> SchedulePlan:
+    """Pick num_chunks: the largest chunking (finest overlap) whose per-chunk
+    latency fraction stays below ``max_latency_fraction``, subject to the
+    staging buffer fitting ``staging_budget``. Mirrors the paper's finding
+    that coordination lets a small merge table (40 KB/port) suffice."""
+    shard = payload_bytes / ring
+    # latency bound: chunk >= α·β·(1/maxfrac - 1)
+    dirs = 2 if bidirectional else 1
+    min_chunk = hw.hop_latency * hw.ici_bw * dirs * \
+        (1.0 / max_latency_fraction - 1.0)
+    c_latency = max(1, int(shard / max(min_chunk, 1.0)))
+    # staging bound: chunk <= budget  =>  c >= shard / budget
+    c_staging = max(1, math.ceil(shard / staging_budget))
+    c = max(c_staging, min(c_latency, 64))
+    return schedule_metrics(payload_bytes, ring, c, compute_time,
+                            bidirectional, hw)

@@ -1,0 +1,338 @@
+"""Graph-level dataflow optimizer (paper §III-C).
+
+A small dataflow IR over TP sub-layer chains plus a fusion pass that:
+
+  1. fuses ``gemm_row → reduce_scatter``  into push-aligned ``gemm_rs``
+     and ``allgather → gemm_col``         into pull-aligned ``ag_gemm``
+     (the compute-aware ISA alignment, §III-A);
+  2. fuses ``gemm_rs → [add] → layernorm → ag_gemm`` chains into one
+     ``fused_rs_ln_ag`` pipeline (deep kernel fusion, Fig. 9);
+  3. pairs *independent* ``gemm_rs`` / ``ag_gemm`` nodes into an
+     ``overlap_asym`` dual-stream op with complementary link directions
+     (asymmetric kernel overlapping, Fig. 9e/10).
+
+The executor runs a graph either as pure math (no mesh; reference) or inside
+``shard_map`` (explicit TP). Tensor layout conventions per value:
+``seq`` (B, S_loc, d) sequence-sharded · ``feat`` (B, S, d_loc)
+feature-sharded · ``full`` (B, S, d) replicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import primitives as prim
+from repro.core.primitives import CAISConfig
+
+# ---------------------------------------------------------------------------
+# IR
+# ---------------------------------------------------------------------------
+
+#        op            inputs                weights         out layout
+# input                ()                    —               declared
+# gemm_col             (x: full)             w (d, F/n)      feat
+# gemm_row             (x: feat)             w (d/n, F)      partial-full
+# allgather            (x: seq)              —               full
+# reduce_scatter       (x: partial-full)     —               seq
+# allreduce            (x: partial-full)     —               full
+# layernorm            (x: any)              scale (d,)      same
+# add                  (a, b) same layout    —               same
+# --- fused (produced by optimize) ---
+# ag_gemm              (x: seq)              w               feat
+# gemm_rs              (x: feat)             w               seq
+# gemm_ar              (x: feat)             w               full
+# fused_rs_ln_ag       (x: feat[, res:seq])  (w1, scale, w2) feat (+ seq z)
+# overlap_asym         (x_rs: feat, x_ag: seq) (w_rs, w_ag)  (seq, feat)
+
+VALID_OPS = {
+    "input", "gemm_col", "gemm_row", "allgather", "reduce_scatter",
+    "allreduce", "layernorm", "add",
+    "ag_gemm", "gemm_rs", "gemm_ar", "fused_rs_ln_ag", "overlap_asym",
+}
+
+
+@dataclass(frozen=True)
+class Node:
+    name: str
+    op: str
+    inputs: Tuple[str, ...] = ()
+    weights: Tuple[str, ...] = ()   # keys into the weights dict
+    outputs: Tuple[str, ...] = ()   # multi-output fused ops; default (name,)
+
+    def __post_init__(self):
+        assert self.op in VALID_OPS, self.op
+        if not self.outputs:
+            object.__setattr__(self, "outputs", (self.name,))
+
+
+@dataclass
+class Graph:
+    nodes: List[Node]
+    outputs: Tuple[str, ...]
+
+    def node_producing(self, value: str) -> Optional[Node]:
+        for n in self.nodes:
+            if value in n.outputs:
+                return n
+        return None
+
+    def consumers(self, value: str) -> List[Node]:
+        return [n for n in self.nodes if value in n.inputs]
+
+    def reaches(self, src: str, dst: str) -> bool:
+        """Is there a dependency path from node `src` to node `dst`?"""
+        by_name = {n.name: n for n in self.nodes}
+        prod = {}
+        for n in self.nodes:
+            for o in n.outputs:
+                prod[o] = n.name
+        seen, stack = set(), [src]
+        while stack:
+            cur = stack.pop()
+            if cur == dst:
+                return True
+            if cur in seen:
+                continue
+            seen.add(cur)
+            for n in self.nodes:
+                if any(v in by_name[cur].outputs for v in n.inputs):
+                    stack.append(n.name)
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Fusion passes
+# ---------------------------------------------------------------------------
+
+
+def _single_consumer(g: Graph, value: str,
+                     allow_output: bool = False) -> Optional[Node]:
+    """The unique consumer of `value`, or None. A value listed in the graph
+    outputs counts as externally consumed unless ``allow_output`` (used when
+    the fused op re-exposes the value, e.g. fused_rs_ln_ag's z output)."""
+    cs = g.consumers(value)
+    if not allow_output and value in g.outputs:
+        return None
+    return cs[0] if len(cs) == 1 else None
+
+
+def fuse_compute_aware(g: Graph) -> Graph:
+    """Pass 1: align collectives with the adjacent GEMM's memory semantics."""
+    nodes = list(g.nodes)
+    changed = True
+    while changed:
+        changed = False
+        for n in nodes:
+            if n.op == "allgather":
+                c = _single_consumer(g, n.name)
+                if c is not None and c.op == "gemm_col":
+                    fused = Node(c.name, "ag_gemm", n.inputs, c.weights)
+                    nodes = [x for x in nodes if x.name not in (n.name, c.name)]
+                    nodes.append(fused)
+                    g = Graph(_topo(nodes, g.outputs), g.outputs)
+                    nodes = list(g.nodes)
+                    changed = True
+                    break
+            if n.op == "gemm_row":
+                c = _single_consumer(g, n.name)
+                if c is not None and c.op in ("reduce_scatter", "allreduce"):
+                    op = "gemm_rs" if c.op == "reduce_scatter" else "gemm_ar"
+                    fused = Node(c.name, op, n.inputs, n.weights)
+                    nodes = [x for x in nodes if x.name not in (n.name, c.name)]
+                    nodes.append(fused)
+                    g = Graph(_topo(nodes, g.outputs), g.outputs)
+                    nodes = list(g.nodes)
+                    changed = True
+                    break
+    return Graph(_topo(nodes, g.outputs), g.outputs)
+
+
+def fuse_sublayer_chain(g: Graph) -> Graph:
+    """Pass 2: gemm_rs → [add residual] → layernorm → ag_gemm ⇒ one pipeline."""
+    nodes = list(g.nodes)
+    for rs in list(nodes):
+        if rs.op != "gemm_rs":
+            continue
+        # rs's value may escape as a graph output — the fused op re-exposes it
+        nxt = _single_consumer(g, rs.name, allow_output=True)
+        residual = None
+        add_node = None
+        if nxt is not None and nxt.op == "add":
+            other = [v for v in nxt.inputs if v != rs.name]
+            residual = other[0] if other else None
+            add_node = nxt
+            nxt = _single_consumer(g, nxt.name, allow_output=True)
+        if nxt is None or nxt.op != "layernorm":
+            continue
+        ln = nxt
+        ag = _single_consumer(g, ln.name)
+        if ag is None or ag.op != "ag_gemm":
+            continue
+        ins = rs.inputs + ((residual,) if residual else ())
+        fused = Node(ag.name, "fused_rs_ln_ag", ins,
+                     rs.weights + ln.weights + ag.weights,
+                     outputs=(ag.name, (add_node or rs).name))
+        drop = {rs.name, ln.name, ag.name} | ({add_node.name} if add_node else set())
+        nodes = [x for x in nodes if x.name not in drop] + [fused]
+        return fuse_sublayer_chain(Graph(_topo(nodes, g.outputs), g.outputs))
+    return Graph(_topo(nodes, g.outputs), g.outputs)
+
+
+def pair_asymmetric(g: Graph) -> Graph:
+    """Pass 3: co-schedule an independent gemm_rs + ag_gemm pair so their
+    complementary ring directions share the links each step."""
+    nodes = list(g.nodes)
+    for a in nodes:
+        if a.op != "gemm_rs":
+            continue
+        for b in nodes:
+            if b.op != "ag_gemm" or b.name == a.name:
+                continue
+            if g.reaches(a.name, b.name) or g.reaches(b.name, a.name):
+                continue
+            fused = Node(f"{a.name}+{b.name}", "overlap_asym",
+                         a.inputs + b.inputs, a.weights + b.weights,
+                         outputs=(a.name, b.name))
+            nodes = [x for x in nodes if x.name not in (a.name, b.name)]
+            nodes.append(fused)
+            return pair_asymmetric(Graph(_topo(nodes, g.outputs), g.outputs))
+    return Graph(_topo(nodes, g.outputs), g.outputs)
+
+
+def optimize(g: Graph, asymmetric: bool = True) -> Graph:
+    g = fuse_compute_aware(g)
+    g = fuse_sublayer_chain(g)
+    if asymmetric:
+        g = pair_asymmetric(g)
+    return g
+
+
+def _topo(nodes: List[Node], outputs) -> List[Node]:
+    """Stable topological order by value availability."""
+    avail = set()
+    for n in nodes:
+        if n.op == "input":
+            avail |= set(n.outputs)
+    ordered, pending = [], [n for n in nodes if n.op != "input"]
+    ordered = [n for n in nodes if n.op == "input"]
+    guard = 0
+    while pending:
+        guard += 1
+        assert guard < 10_000, "cycle in dataflow graph"
+        for n in list(pending):
+            if all(v in avail for v in n.inputs):
+                ordered.append(n)
+                avail |= set(n.outputs)
+                pending.remove(n)
+    return ordered
+
+
+# ---------------------------------------------------------------------------
+# Executor
+# ---------------------------------------------------------------------------
+
+
+def execute(g: Graph, values: Dict[str, jnp.ndarray],
+            weights: Dict[str, jnp.ndarray], axis: Optional[str] = None,
+            cais: CAISConfig = CAISConfig(), norm: str = "rmsnorm"):
+    """Evaluate the graph. With ``axis`` set this must run inside shard_map
+    (values/weights are local shards per the layout conventions); without it,
+    collectives degenerate to identity/plain math (single-device reference)."""
+    from repro.models.layers import apply_norm
+
+    env = dict(values)
+    dist = axis is not None
+
+    for n in g.nodes:
+        if n.op == "input":
+            continue
+        ins = [env[v] for v in n.inputs]
+        ws = [weights[k] for k in n.weights]
+        if n.op == "gemm_col" or n.op == "gemm_row":
+            env[n.name] = ins[0] @ ws[0]
+        elif n.op == "allgather":
+            env[n.name] = (jax.lax.all_gather(ins[0], axis, axis=1, tiled=True)
+                           if dist else ins[0])
+        elif n.op == "reduce_scatter":
+            env[n.name] = (jax.lax.psum_scatter(ins[0], axis,
+                                                scatter_dimension=1, tiled=True)
+                           if dist else ins[0])
+        elif n.op == "allreduce":
+            env[n.name] = jax.lax.psum(ins[0], axis) if dist else ins[0]
+        elif n.op == "layernorm":
+            env[n.name] = apply_norm(norm, {"scale": ws[0]}, ins[0])
+        elif n.op == "add":
+            env[n.name] = ins[0] + ins[1]
+        elif n.op == "ag_gemm":
+            env[n.name] = (prim.ag_gemm(ins[0], ws[0], axis, cais)
+                           if dist else ins[0] @ ws[0])
+        elif n.op == "gemm_rs":
+            env[n.name] = (prim.gemm_rs(ins[0], ws[0], axis, cais)
+                           if dist else ins[0] @ ws[0])
+        elif n.op == "gemm_ar":
+            env[n.name] = (prim.gemm_ar(ins[0], ws[0], axis, cais)
+                           if dist else ins[0] @ ws[0])
+        elif n.op == "fused_rs_ln_ag":
+            w1, scale, w2 = ws
+            res = env[n.inputs[1]] if len(n.inputs) > 1 else None
+            if dist:
+                out, z = prim.fused_rs_ln_ag(ins[0], w1, scale, w2, axis,
+                                             cais, norm=norm, residual=res)
+            else:
+                z = ins[0] @ w1
+                if res is not None:
+                    z = z + res
+                out = apply_norm(norm, {"scale": scale}, z) @ w2
+            env[n.outputs[0]], env[n.outputs[1]] = out, z
+        elif n.op == "overlap_asym":
+            w_rs, w_ag = ws
+            if dist:
+                rs_out, ag_out = prim.overlap_asymmetric(
+                    (ins[0], w_rs), (ins[1], w_ag), axis, cais)
+            else:
+                rs_out, ag_out = ins[0] @ w_rs, ins[1] @ w_ag
+            env[n.outputs[0]], env[n.outputs[1]] = rs_out, ag_out
+        else:
+            raise ValueError(n.op)
+    return tuple(env[o] for o in g.outputs)
+
+
+# ---------------------------------------------------------------------------
+# Canonical sub-layer graphs (paper Fig. 12, L1–L4)
+# ---------------------------------------------------------------------------
+
+
+def sublayer_graph() -> Graph:
+    """[GEMM (row) → RS] → LN → [AG → GEMM (col)] — the L1–L4 shape:
+    e.g. L2 = second FFN layer → LayerNorm → input projection."""
+    return Graph(
+        nodes=[
+            Node("x", "input"),
+            Node("g1", "gemm_row", ("x",), ("w1",)),
+            Node("rs", "reduce_scatter", ("g1",)),
+            Node("ln", "layernorm", ("rs",), ("scale",)),
+            Node("ag", "allgather", ("ln",)),
+            Node("g2", "gemm_col", ("ag",), ("w2",)),
+        ],
+        outputs=("g2",),
+    )
+
+
+def dual_sublayer_graph() -> Graph:
+    """Two independent sub-chains (e.g. two microbatches / fwd+bwd): the
+    optimizer pairs the RS of one with the AG-GEMM of the other."""
+    return Graph(
+        nodes=[
+            Node("xa", "input"),
+            Node("xb", "input"),
+            Node("ga", "gemm_row", ("xa",), ("wa",)),
+            Node("rsa", "reduce_scatter", ("ga",)),
+            Node("agb", "allgather", ("xb",)),
+            Node("gb", "gemm_col", ("agb",), ("wb",)),
+        ],
+        outputs=("rsa", "gb"),
+    )

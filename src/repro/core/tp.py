@@ -1,0 +1,293 @@
+"""Tensor-parallel block execution in three modes (pjit-callable wrappers):
+
+  * ``auto``    — plain jnp + sharding constraints; XLA chooses/schedules the
+                  collectives (the strong compiler baseline).
+  * ``barrier`` — explicit ``shard_map`` with *monolithic* collectives around
+                  each GEMM: the NVLS-style communication-centric structure
+                  (one opaque all-gather / reduce-scatter phase).
+  * ``cais``    — explicit ``shard_map`` with the decomposed collective-fused
+                  schedules from :mod:`repro.core.primitives` (the paper's
+                  technique, TPU-native).
+
+The unit of execution is the transformer sub-layer chain the paper evaluates
+(L1–L4): [attention out-GEMM →RS] + LN + [AG→ FFN GEMMs] — see
+``sp_attention`` and ``sp_ffn``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding
+from repro.core import primitives as prim
+from repro.core.primitives import CAISConfig
+
+BATCH = sharding.BATCH_AXES
+MODEL = sharding.MODEL_AXIS
+
+
+@dataclass(frozen=True)
+class TPContext:
+    mesh: Mesh
+    mode: str = "cais"               # barrier | cais
+    cais: CAISConfig = CAISConfig()
+
+    @property
+    def tp(self) -> int:
+        return sharding.axis_size(self.mesh, MODEL)
+
+
+def _specs(mesh, *entries):
+    return sharding._filter_spec(mesh, P(*entries))
+
+
+def _smap(tpc: TPContext, fn, in_specs, out_specs):
+    return jax.shard_map(
+        fn, mesh=tpc.mesh,
+        in_specs=tuple(_specs(tpc.mesh, *s) for s in in_specs),
+        out_specs=(tuple(_specs(tpc.mesh, *s) for s in out_specs)
+                   if isinstance(out_specs, list)
+                   else _specs(tpc.mesh, *out_specs)),
+        check_vma=False)
+
+
+# ---------------------------------------------------------------------------
+# FFN sub-layer: LN -> AG-GEMM(up[,gate]) -> act -> GEMM-RS(down)
+# ---------------------------------------------------------------------------
+
+
+def sp_ffn(tpc: TPContext, x, norm_scale, w_up, w_gate, w_down,
+           act: str, norm_kind: str = "rmsnorm"):
+    """x: (B, S, d) logically sequence-sharded. Returns FFN(LN(x)) with the
+    residual handled by the caller. ``w_gate`` may be None."""
+    from repro.models.layers import activation, apply_norm, gated
+
+    has_gate = w_gate is not None
+    cais = tpc.cais
+
+    def local(x, norm_scale, w_up, w_gate, w_down):
+        # x: (B, S_loc, d) local shard; weights local shards
+        xn = apply_norm(norm_kind, {"scale": norm_scale}, x)
+        if tpc.mode == "barrier":
+            h = prim.barrier_ag_gemm(xn, w_up, MODEL)
+            if has_gate:
+                g = prim.barrier_ag_gemm(xn, w_gate, MODEL)
+                h = activation(act, g) * h
+            else:
+                h = activation(act, h)
+            return prim.barrier_gemm_rs(h, w_down, MODEL)
+        ws = (w_up, w_gate) if has_gate else (w_up,)
+        outs = prim.ag_gemm_multi(xn, ws, MODEL, cais)
+        if has_gate:
+            h = activation(act, outs[1]) * outs[0]
+        else:
+            h = activation(act, outs[0])
+        return prim.gemm_rs(h, w_down, MODEL, cais)
+
+    gate_spec = (None, MODEL) if has_gate else (None, MODEL)
+    fn = _smap(
+        tpc, local,
+        in_specs=[(BATCH, MODEL, None),      # x sequence-sharded
+                  (None,),                   # norm scale replicated
+                  (None, MODEL),             # up col-sharded
+                  gate_spec,                 # gate col-sharded
+                  (MODEL, None)],            # down row-sharded
+        out_specs=(BATCH, MODEL, None))
+    if has_gate:
+        return fn(x, norm_scale, w_up, w_gate, w_down)
+    # shard_map needs a concrete arg; pass up again as a dummy for the slot
+    return _smap(
+        tpc, lambda x, ns, wu, wd: local(x, ns, wu, None, wd),
+        in_specs=[(BATCH, MODEL, None), (None,), (None, MODEL),
+                  (MODEL, None)],
+        out_specs=(BATCH, MODEL, None))(x, norm_scale, w_up, w_down)
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-layer: LN -> AG-GEMM(QKV) -> attn core -> GEMM-RS(out)
+# ---------------------------------------------------------------------------
+
+
+def sp_attention(tpc: TPContext, x, norm_scale, wq, wk, wv, wo, cfg,
+                 window: int = 0, prefix_len: int = 0,
+                 norm_kind: str = "rmsnorm"):
+    """Full Megatron-SP attention block with CAIS/barrier collectives.
+    x: (B, S, d) sequence-sharded; Q heads shard over `model`. When
+    num_kv_heads < tp (GQA/MQA), K/V weights replicate and every device
+    computes the full K/V from the same gathered activation chunks — the
+    standard Megatron KV-replication, and the gather is still shared with
+    the Q projection (one CAIS ring feeds all three)."""
+    from repro.models.attention import attention_core
+    from repro.models.layers import apply_norm, apply_rope
+
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    tp = tpc.tp
+    cais = tpc.cais
+    kv_sharded = Hkv % tp == 0
+
+    def local(x, norm_scale, wq, wk, wv, wo):
+        B, S_loc, d = x.shape
+        xn = apply_norm(norm_kind, {"scale": norm_scale}, x)
+        if tpc.mode == "barrier":
+            q = prim.barrier_ag_gemm(xn, wq, MODEL)
+            k = prim.barrier_ag_gemm(xn, wk, MODEL)
+            v = prim.barrier_ag_gemm(xn, wv, MODEL)
+        else:
+            q, k, v = prim.ag_gemm_multi(xn, (wq, wk, wv), MODEL, cais)
+        S = q.shape[1]
+        B_ = q.shape[0]
+        H_loc = max(H // tp, 1)
+        Hkv_loc = max(Hkv // tp, 1) if kv_sharded else Hkv
+        pos = jnp.broadcast_to(jnp.arange(S), (B_, S))
+        q = apply_rope(q.reshape(B_, S, H_loc, dh), pos, cfg.rope_theta)
+        k = apply_rope(k.reshape(B_, S, Hkv_loc, dh), pos, cfg.rope_theta)
+        v = v.reshape(B_, S, Hkv_loc, dh)
+        if not kv_sharded:
+            # replicated KV: slice the kv heads this device's q heads use
+            # (contiguous because head sharding is contiguous)
+            g = H // Hkv                    # q heads per kv head
+            need = max(H_loc // g, 1)
+            start = (jax.lax.axis_index(MODEL) * H_loc) // g
+            k = jax.lax.dynamic_slice_in_dim(k, start, need, axis=2)
+            v = jax.lax.dynamic_slice_in_dim(v, start, need, axis=2)
+        o = attention_core(q, k, v, q_positions=pos, kv_positions=pos,
+                           causal=True, window=window, prefix_len=prefix_len)
+        o = o.reshape(B_, S, H_loc * dh)
+        if tpc.mode == "barrier":
+            return prim.barrier_gemm_rs(o, wo, MODEL)
+        return prim.gemm_rs(o, wo, MODEL, cais)
+
+    kv_spec = (None, MODEL) if kv_sharded else (None, None)
+    return _smap(
+        tpc, local,
+        in_specs=[(BATCH, MODEL, None), (None,),
+                  (None, MODEL), kv_spec, kv_spec,
+                  (MODEL, None)],
+        out_specs=(BATCH, MODEL, None))(x, norm_scale, wq, wk, wv, wo)
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN sub-layer over EP: CAIS-decomposed expert all-to-all
+# ---------------------------------------------------------------------------
+
+
+def sp_moe_ffn(tpc: TPContext, x, norm_scale, params, cfg,
+               norm_kind: str = "rmsnorm"):
+    """MoE FFN with the CAIS expert-a2a pipeline (beyond-paper extension,
+    EXPERIMENTS.md §Perf cell 2): each device routes its sequence shard's
+    tokens to expert owners with interleaved ±direction dispatch/combine
+    permutes overlapped with the expert GEMMs.
+
+    Owner mapping: device j owns experts [j·E_loc, (j+1)·E_loc) when
+    E ≥ tp (E % tp == 0); when E < tp (tp % E == 0) expert e lives on
+    device e·(tp/E) and the others idle through the FFN (their buffers are
+    zero-capacity padding). x: (B, S, d) sequence-sharded. Returns FFN(LN(x))
+    (residual handled by the caller) and the load-balancing aux loss."""
+    from repro.models.ffn import _top2_dispatch
+    from repro.models.layers import activation, apply_norm, gated
+
+    m = cfg.moe
+    E = m.num_experts
+    tp = tpc.tp
+    cais = tpc.cais
+    E_loc = max(E // tp, 1)
+    has_gate = "w_gate" in params
+
+    def local(x, ns, router, wu, wg, wd):
+        B, S_loc, d = x.shape
+        xn = apply_norm(norm_kind, {"scale": ns}, x)
+        t = xn.reshape(B * S_loc, d)
+        T = t.shape[0]
+
+        logits = t.astype(jnp.float32) @ router
+        probs = jax.nn.softmax(logits, -1)
+        cap = max(1, int(T * m.top_k / E * m.capacity_factor))
+        dispatch, combine, aux = _top2_dispatch(probs[None], cap)
+        dispatch, combine = dispatch[0], combine[0]     # (T, E, cap)
+
+        # send[j]: (E_loc·cap, d) tokens for the experts device j owns
+        de = jnp.einsum("tec,td->ecd", dispatch.astype(t.dtype), t)
+        if E >= tp:
+            send = de.reshape(tp, E_loc * cap, d)
+        else:
+            # owner(e) = e·(tp/E); other devices get zero-capacity padding
+            stride = tp // E
+            send = jnp.zeros((tp, cap, d), t.dtype)
+            send = send.at[::stride].set(de)
+
+        if E >= tp:
+            wu_l, wg_l, wd_l = wu, wg, wd   # already the local expert shard
+        else:
+            # replicated weights: slice this owner's single expert
+            eidx = jax.lax.axis_index(MODEL) // (tp // E)
+            wu_l = jax.lax.dynamic_index_in_dim(wu, eidx, 0, keepdims=True)
+            wg_l = jax.lax.dynamic_index_in_dim(wg, eidx, 0, keepdims=True)
+            wd_l = jax.lax.dynamic_index_in_dim(wd, eidx, 0, keepdims=True)
+
+        def expert_ffn(chunk):
+            # chunk: (E_loc·cap, d) → per-local-expert gated FFN
+            c = chunk.reshape(E_loc, -1, d)
+            h = jnp.einsum("ecd,edf->ecf", c, wu_l)
+            if has_gate:
+                g = jnp.einsum("ecd,edf->ecf", c, wg_l)
+                h = activation(cfg.act, g) * h
+            else:
+                h = activation(cfg.act, h)
+            out = jnp.einsum("ecf,efd->ecd", h, wd_l)
+            return out.reshape(chunk.shape)
+
+        if tpc.mode == "barrier":
+            ret = prim.barrier_a2a_expert_ffn(send, expert_ffn, MODEL)
+        else:
+            ret = prim.a2a_expert_ffn(send, expert_ffn, MODEL, cais)
+
+        if E >= tp:
+            eout = ret.reshape(E, cap, d)
+        else:
+            eout = ret[::tp // E]
+        y = jnp.einsum("tec,ecd->td", combine.astype(t.dtype), eout)
+        out = y.reshape(B, S_loc, d)
+        if m.dense_residual_d_ff:
+            from repro.models.ffn import mlp_forward
+            out = out + mlp_forward(params["dense"], xn, cfg.act)
+        return out, aux.astype(jnp.float32)[None]
+
+    dtype = x.dtype
+    wu = params["w_up"].astype(dtype)
+    wg = params["w_gate"].astype(dtype) if has_gate else \
+        jnp.zeros_like(params["w_up"], dtype)
+    wd = params["w_down"].astype(dtype)
+    e_spec = (MODEL, None, None) if E % tp == 0 else (None, None, None)
+    out, aux = _smap(
+        tpc, local,
+        in_specs=[(BATCH, MODEL, None), (None,), (None, None),
+                  e_spec, e_spec, e_spec],
+        out_specs=[(BATCH, MODEL, None), (MODEL,)])(
+            x, norm_scale, params["router"], wu, wg, wd)
+    return out, jnp.mean(aux)
+
+
+def tp_applicable(cfg, kind: str, tp: int) -> bool:
+    """CAIS/barrier shard_map path requires Q-head and feature divisibility
+    (KV heads may replicate); otherwise the block stays on the `auto` path
+    (DESIGN.md §5)."""
+    if kind in ("attn", "swa"):
+        return cfg.num_heads % tp == 0 and cfg.norm == "rmsnorm"
+    if kind == "ffn":
+        return cfg.moe is None and cfg.d_ff > 0 and cfg.d_ff % tp == 0 \
+            and cfg.norm == "rmsnorm"
+    if kind == "moe":
+        # integrated path requires true EP: with E < tp the owner mapping
+        # works (primitive-level tests) but replicated expert weights turn
+        # their gradients into a full-size all-reduce — measured regression,
+        # EXPERIMENTS.md §Perf cell 2. Grouped-EP weight sharding is the
+        # production fix (backlog); until then those archs keep `auto`.
+        return cfg.moe is not None and cfg.norm == "rmsnorm" and \
+            cfg.moe.num_experts % tp == 0
+    return False

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, iterate, make_batch
+
+__all__ = ["DataConfig", "iterate", "make_batch"]

@@ -1,0 +1,3 @@
+from repro.ft.watchdog import Heartbeat, PreemptionGuard, StepWatchdog
+
+__all__ = ["StepWatchdog", "Heartbeat", "PreemptionGuard"]

@@ -1,0 +1,22 @@
+"""Target-hardware constants (TPU v5e) shared by roofline + perfsim.
+
+These are the numbers mandated for the roofline analysis:
+197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HWSpec:
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    ici_bw: float = 50e9              # bytes/s per link per direction
+    ici_links: int = 1                # roofline term uses chips × link_bw
+    hop_latency: float = 1e-6         # per collective-permute hop (s)
+    vmem_bytes: int = 128 * 1024**2   # v5e VMEM per core (staging budget ref)
+    hbm_bytes: int = 16 * 1024**3     # v5e HBM per chip
+
+
+V5E = HWSpec()

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b, out_dtype=None):
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def matmul_rmsnorm_ref(a, b, scale, eps: float = 1e-6, out_dtype=None):
+    out_dtype = out_dtype or a.dtype
+    z = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    var = jnp.mean(z * z, axis=-1, keepdims=True)
+    zn = z * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return zn.astype(out_dtype)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, scale=None):
+    """q,k,v: (BH, S, d) — naive softmax attention in f32."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    s = jnp.einsum("bqd,bkd->bqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        Sq, Skv = q.shape[1], k.shape[1]
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), k=Skv - Sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v)

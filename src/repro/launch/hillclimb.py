@@ -1,0 +1,99 @@
+"""§Perf hillclimbing driver: run Runtime variants of a dry-run cell and
+log hypothesis → change → before/after roofline terms (EXPERIMENTS.md §Perf).
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell deepseek-7b:train_4k
+
+Each variant is one (hypothesis, Runtime patch); the dominant term of the
+baseline decides which levers are enumerated (DESIGN.md §4 + the assignment's
+per-iteration methodology)."""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+# (name, hypothesis, tp_mode, cais_chunks, rt_overrides)
+VARIANTS = {
+    "baseline": ("paper-faithful SP-TP with monolithic (NVLS-style) "
+                 "collectives scheduled by XLA", "auto", 8, {}),
+    "barrier": ("explicit barrier collectives (strict NVLS phase structure; "
+                "expect ≥ baseline collective exposure)", "barrier", 8, {}),
+    "cais8": ("CAIS decomposed bidirectional ring schedules, 8 chunks: "
+              "collective bytes move to collective-permute and overlap "
+              "with partial GEMMs", "cais", 8, {}),
+    "cais2": ("coarser chunks (2): fewer permutes, bigger staging buffer — "
+              "latency ↓, overlap granularity ↓", "cais", 2, {}),
+    "cais16": ("finer chunks (16): finer overlap, more per-hop latency",
+               "cais", 16, {}),
+    "cais8-uni": ("unidirectional rings (CAIS-Base analogue): one ICI "
+                  "direction idles — collective term should ~2×",
+                  "cais", 8, {"cais_bidirectional": False}),
+    "no-remat": ("disable activation checkpointing: recompute flops "
+                 "disappear (compute term ↓ ~25%), memory residency ↑",
+                 "auto", 8, {"remat": False}),
+    "no-sp": ("disable sequence parallelism: activations replicated on "
+              "model axis between blocks — collective pattern shifts "
+              "AG/RS → AR", "auto", 8, {"sequence_parallel": False}),
+    # ---- decode-cell levers ----
+    "cache-repl": ("replicate the KV cache over the TP axis instead of "
+                   "context-parallel sharding: memory term should blow up "
+                   "~tp x on the cache-read side (negative control)",
+                   "auto", 8, {"cache_layout": "batch_only"}),
+    "f32-compute": ("f32 activations/caches instead of bf16: memory term "
+                    "x2 (confirms the dtype lever)", "auto", 8,
+                    {"compute_dtype": "float32"}),
+    # ---- stacked winners ----
+    "cais2-noremat": ("stack the two confirmed wins: coarse-chunk CAIS "
+                      "rings + no recompute (activations fit at 4k)",
+                      "cais", 2, {"remat": False}),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    help="arch:shape, e.g. deepseek-7b:train_4k")
+    ap.add_argument("--variants", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default="reports/hillclimb")
+    args = ap.parse_args()
+
+    arch, shape = args.cell.split(":")
+    names = list(VARIANTS) if args.variants == "all" \
+        else args.variants.split(",")
+    os.makedirs(args.out, exist_ok=True)
+
+    results = {}
+    for name in names:
+        hyp, mode, chunks, rto = VARIANTS[name]
+        print(f"=== {arch}:{shape} [{name}] ===\n  hypothesis: {hyp}",
+              flush=True)
+        rec = run_cell(arch, shape, args.mesh == "multi", mode, chunks,
+                       verbose=False, rt_overrides=rto)
+        rec["variant"] = name
+        rec["hypothesis"] = hyp
+        results[name] = rec
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            print(f"  compute={r['compute_s']:.3e}s "
+                  f"memory={r['memory_s']:.3e}s "
+                  f"collective={r['collective_s']:.3e}s "
+                  f"dominant={r['dominant']} ({rec['compile_s']}s compile)",
+                  flush=True)
+            ca = rec["hlo_analysis"]
+            print(f"  coll mix: " + " ".join(
+                f"{k.split('_')[1]}={v:.2e}" for k, v in ca.items()
+                if k.startswith("coll_") and v > 0), flush=True)
+        else:
+            print(f"  -> {rec['status']}: {rec.get('error', '')[:200]}",
+                  flush=True)
+        with open(os.path.join(args.out, f"{arch}.{shape}.{name}.json"),
+                  "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,304 @@
+"""Sharding specs + ShapeDtypeStruct input builders for the dry-run and
+the real launchers.
+
+`input_specs(arch, shape)` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every model input of the (arch × shape) cell — no device
+allocation. `param_shardings` / `state_shardings` / `cache_shardings` map
+the corresponding pytrees onto the production mesh (Megatron TP/SP rules +
+EP for MoE + optional FSDP and ZeRO-1 over the DP axes; DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import build_model
+from repro.runtime import Runtime
+
+B_AX = sharding.BATCH_AXES      # ("pod", "data")
+D_AX = sharding.DATA_AXIS
+M_AX = sharding.MODEL_AXIS
+
+# column-parallel (output dim -> model) / row-parallel (input dim -> model)
+_COL = {"wq", "wk", "wv", "wq_a", "wq_b", "wkv_a", "wk_b", "wv_b",
+        "w_y", "w_x", "vision_proj", "lm_head"}
+_ROW = {"wo", "w_out"}
+
+
+def runtime_for(cfg: ArchConfig, tp_mode: str = "auto",
+                cais_chunks: int = 8) -> Runtime:
+    """Per-arch runtime defaults for the production meshes."""
+    param_dtype = "bfloat16" if cfg.param_count() > 6e10 else "float32"
+    return Runtime(compute_dtype="bfloat16", param_dtype=param_dtype,
+                   tp_mode=tp_mode, cais_chunks=cais_chunks,
+                   remat=True, sequence_parallel=True)
+
+
+def _dim_ok(shape, i, mesh, axis) -> bool:
+    return sharding.axis_size(mesh, axis) > 1 and \
+        shape[i] % sharding.axis_size(mesh, axis) == 0
+
+
+def _axsize(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= sharding.axis_size(mesh, a)
+        return n
+    return sharding.axis_size(mesh, entry)
+
+
+def sanitize_spec(mesh: Mesh, spec_entries, shape) -> P:
+    """Drop spec axes that don't divide their dim (explicit in_shardings
+    demand exact divisibility — e.g. batch=1 long-context decode replicates
+    over the data axes; odd vocabs replicate over model)."""
+    out = []
+    for i, e in enumerate(spec_entries):
+        if e is None or i >= len(shape):
+            out.append(None)
+            continue
+        size = _axsize(mesh, e)
+        if size > 1 and shape[i] % size == 0:
+            out.append(e)
+        elif isinstance(e, (tuple, list)):
+            # keep the divisible prefix of a composite axis (e.g. batch 128
+            # over ("pod","data")=32 ok; batch 8 keeps just "data"... )
+            kept = []
+            n = 1
+            for a in e:
+                s = sharding.axis_size(mesh, a)
+                if s > 1 and shape[i] % (n * s) == 0:
+                    kept.append(a)
+                    n *= s
+            out.append(tuple(kept) if kept else None)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+_STACK_KEYS = ("periods", "enc_blocks", "dec_blocks")
+
+
+def param_pspec(path: Tuple[str, ...], shape, cfg: ArchConfig, mesh: Mesh,
+                fsdp: bool) -> P:
+    """TP/SP/EP placement for one parameter. Scan-stacked params ("periods",
+    whisper's "enc_blocks"/"dec_blocks") carry a leading layer dim that stays
+    replicated; rules apply to the trailing (per-layer) dims."""
+    name = path[-1]
+    lead = 1 if any(k in path for k in _STACK_KEYS) else 0
+    base = shape[lead:]
+    nd = len(base)
+    in_moe = "ffn" in path and cfg.moe is not None and "dense" not in path
+    tp = sharding.tp_size(mesh)
+
+    def fin(spec_list, fsdp_prefer=()):
+        # explicit in_shardings demand exact divisibility: drop any axis
+        # that does not divide its dim (e.g. odd vocabs stay replicated)
+        for i, e in enumerate(spec_list):
+            if e is not None and base[i] % sharding.axis_size(mesh, e) != 0:
+                spec_list[i] = None
+        if fsdp:
+            for i in fsdp_prefer:
+                if spec_list[i] is None and \
+                        sharding.axis_size(mesh, D_AX) > 1 and \
+                        base[i] % sharding.axis_size(mesh, D_AX) == 0:
+                    spec_list[i] = D_AX
+                    break
+        return P(*([None] * lead + spec_list))
+
+    if name == "embed":                       # (V, d)
+        return fin([M_AX, None], (1,))
+    if name == "router":                      # (d, E) — replicated, f32
+        return fin([None, None])
+    if in_moe and nd == 3 and name in ("w_up", "w_gate", "w_down"):
+        E = base[0]
+        if tp > 1 and E % tp == 0:            # expert parallelism
+            return fin([M_AX, None, None], (1, 2))
+        # expert-TP: shard the ffn hidden dim instead
+        hid = 2 if name in ("w_up", "w_gate") else 1
+        spec = [None, None, None]
+        spec[hid] = M_AX
+        return fin(spec, (2, 1) if hid == 1 else (1,))
+    if name in _COL or (nd == 2 and name in ("w_up", "w_gate")):
+        return fin([None, M_AX], (0,))
+    if name in _ROW or (nd == 2 and name == "w_down"):
+        return fin([M_AX, None], (1,))
+    # everything else (norms, conv filters, gates, biases, ssm params,
+    # mamba2's fused in-proj — see DESIGN.md §5 applicability) replicates
+    return P(*([None] * lead + [None] * nd))
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    return tuple(
+        str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+        for p in path)
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, params_shape,
+                    fsdp: bool = False):
+    def one(path, leaf):
+        spec = param_pspec(_path_keys(path), leaf.shape, cfg, mesh, fsdp)
+        return sharding.named_sharding(mesh, *spec)
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def _zero_spec(spec: P, shape, mesh: Mesh) -> P:
+    """ZeRO-1: shard one replicated dim of the optimizer state over data."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, e in enumerate(entries):
+        if e is None and _dim_ok(shape, i, mesh, D_AX):
+            entries[i] = D_AX
+            return P(*entries)
+    return P(*entries)
+
+
+def state_shardings(cfg: ArchConfig, mesh: Mesh, state_shape, rt: Runtime,
+                    fsdp: bool = False):
+    """Shardings for the {"params", "opt", "step"} train-state pytree."""
+    pspecs: Dict[Tuple[str, ...], P] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            state_shape["params"])[0]:
+        pspecs[_path_keys(path)] = param_pspec(
+            _path_keys(path), leaf.shape, cfg, mesh, fsdp)
+
+    def opt_spec(path, leaf):
+        keys = _path_keys(path)
+        # adamw: ("m"|"v", *param_path); adafactor: (*param_path, "vr"|...)
+        if keys[0] in ("m", "v"):
+            base, kind = keys[1:], keys[0]
+        else:
+            base, kind = keys[:-1], keys[-1]
+        spec = pspecs.get(base, P())
+        entries = list(spec) + [None] * max(0, len(leaf.shape) - len(spec))
+        if kind == "vr":
+            entries = entries[:-1]
+        elif kind == "vc":
+            entries = entries[:-2] + entries[-1:]
+        entries = entries[:len(leaf.shape)]
+        spec = P(*entries)
+        if rt.zero_sharding:
+            spec = _zero_spec(spec, leaf.shape, mesh)
+        return sharding.named_sharding(mesh, *spec)
+
+    def param_sh(path, leaf):
+        return sharding.named_sharding(mesh, *pspecs[_path_keys(path)])
+
+    return {
+        "params": jax.tree_util.tree_map_with_path(
+            param_sh, state_shape["params"]),
+        "opt": jax.tree_util.tree_map_with_path(opt_spec, state_shape["opt"]),
+        "step": sharding.named_sharding(mesh),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cache shardings (decode cells): batch→data axes, long axis→model
+# ---------------------------------------------------------------------------
+
+
+def _cache_leaf_spec(name: str, nd: int) -> P:
+    if name in ("k", "v"):            # (..., B, S|W, H, dh)
+        tail = (B_AX, M_AX, None, None)
+    elif name == "kpos":              # (..., B, W)
+        tail = (B_AX, M_AX)
+    elif name in ("c_kv", "k_rope"):  # (..., B, S, r)
+        tail = (B_AX, M_AX, None)
+    elif name == "h" and nd >= 4:     # ssm state (..., B, heads, p, n)
+        tail = (B_AX, None, None, M_AX)
+    elif name == "h":                 # rg-lru state (..., B, width)
+        tail = (B_AX, M_AX)
+    elif name == "conv":              # (..., B, w-1, channels)
+        tail = (B_AX, None, M_AX)
+    else:
+        tail = ()
+    lead = (None,) * (nd - len(tail))
+    return P(*(lead + tail))
+
+
+def cache_shardings(mesh: Mesh, cache_shape, layout: str = "context"):
+    def one(path, leaf):
+        name = _path_keys(path)[-1]
+        spec = _cache_leaf_spec(name, len(leaf.shape))
+        if layout == "batch_only":   # drop the model-axis (context) sharding
+            spec = P(*(None if e == M_AX else e for e in spec))
+        spec = sanitize_spec(mesh, tuple(spec), leaf.shape)
+        return sharding.named_sharding(mesh, *spec)
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+# ---------------------------------------------------------------------------
+# input_specs — ShapeDtypeStruct stand-ins per (arch × shape)
+# ---------------------------------------------------------------------------
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeConfig,
+                 rt: Runtime) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Training/prefill batch structs (tokens shifted labels for train)."""
+    b = shape.global_batch
+    s = shape.seq_len
+    if cfg.num_prefix_tokens:
+        s = s - cfg.num_prefix_tokens     # image prefix occupies positions
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.is_enc_dec:
+        out["src_embed"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder.max_source_len, cfg.d_model), jnp.float32)
+    if cfg.num_prefix_tokens:
+        out["patch_embed"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_prefix_tokens, cfg.vision_width), jnp.float32)
+    return out
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                    rt: Runtime):
+    structs = batch_struct(cfg, shape, rt)
+    return {
+        k: sharding.named_sharding(mesh, *sanitize_spec(
+            mesh, (B_AX,) + (None,) * (len(v.shape) - 1), v.shape))
+        for k, v in structs.items()
+    }
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, rt: Runtime,
+                model=None) -> Dict[str, Any]:
+    """All inputs of the cell's step as ShapeDtypeStructs.
+
+    train:   {"state", "batch"}
+    prefill: {"params", "batch"}
+    decode:  {"params", "token", "caches", "idx"}
+    """
+    model = model or build_model(cfg, rt)
+    if shape.kind == "train":
+        from repro.optim import constant_schedule, make_optimizer
+        from repro.train.step import init_state
+        opt = make_optimizer(cfg.optimizer, constant_schedule(1e-4))
+        state = jax.eval_shape(
+            lambda: init_state(model, opt, jax.random.key(0)))
+        return {"state": state, "batch": batch_struct(cfg, shape, rt)}
+
+    params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    if shape.kind == "prefill":
+        return {"params": params, "batch": batch_struct(cfg, shape, rt)}
+
+    # decode: one new token against a seq_len KV cache
+    b = shape.global_batch
+    caches = jax.eval_shape(
+        lambda: model.init_cache(b, shape.seq_len))
+    return {
+        "params": params,
+        "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "caches": caches,
+        "idx": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }

@@ -1,0 +1,86 @@
+"""Production training launcher.
+
+    python -m repro.launch.train --arch deepseek-7b --shape train_4k \
+        --mesh single --tp-mode cais --steps 100 --ckpt-dir /ckpts/run1
+
+On a real pod this process runs per-host under the TPU runtime and the mesh
+maps onto physical chips; on this box it drives whatever devices exist (use
+--smoke for a reduced config on CPU). All state is sharded per
+launch/specs.py; restart is automatic from --ckpt-dir (deterministic resume,
+see train/trainer.py)."""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro import sharding
+from repro.configs import SHAPES_BY_NAME, ShapeConfig, get_arch
+from repro.data.pipeline import DataConfig
+from repro.launch import specs as S
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.models import build_model
+from repro.optim import cosine_schedule, make_optimizer
+from repro.train import Trainer, TrainerConfig
+from repro.train.step import init_state
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "debug", "single", "multi"])
+    ap.add_argument("--tp-mode", default="auto",
+                    choices=["auto", "barrier", "cais"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + tiny shape (CPU-runnable)")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+        shape = ShapeConfig("smoke_train", 128, 4, "train")
+        rt = S.runtime_for(cfg, tp_mode=args.tp_mode)
+        rt = dataclasses.replace(rt, compute_dtype="float32",
+                                  remat=False, loss_chunk=64)
+    else:
+        shape = SHAPES_BY_NAME[args.shape]
+        rt = S.runtime_for(cfg, tp_mode=args.tp_mode)
+
+    mesh = {"none": None, "debug": make_debug_mesh,
+            "single": lambda: make_production_mesh(multi_pod=False),
+            "multi": lambda: make_production_mesh(multi_pod=True)}[args.mesh]
+    mesh = mesh() if callable(mesh) else mesh
+
+    model = build_model(cfg, rt)
+    opt = make_optimizer(cfg.optimizer,
+                         cosine_schedule(args.lr, args.warmup, args.steps))
+    tc = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=args.ckpt_every, log_every=10,
+                       microbatches=args.microbatches)
+    trainer = Trainer(model, opt, cfg, shape, rt, tc, DataConfig(args.seed),
+                      mesh=mesh)
+
+    if mesh is not None:
+        # shard the fresh/restored state onto the mesh before stepping
+        with sharding.use_mesh(mesh):
+            state = trainer.restore_or_init(args.seed)
+            shapes = jax.eval_shape(lambda: state)
+            sh = S.state_shardings(cfg, mesh, shapes, rt)
+            state = jax.device_put(state, sh)
+            trainer.run(state)
+    else:
+        trainer.run()
+
+
+if __name__ == "__main__":
+    main()

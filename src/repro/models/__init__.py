@@ -1,0 +1,6 @@
+from repro.models.api import build_model
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import LM
+from repro.models.vlm import VLM
+
+__all__ = ["build_model", "LM", "EncDecLM", "VLM"]

@@ -1,0 +1,23 @@
+"""Model factory: ArchConfig -> model object with the uniform API
+
+    init(key) -> params
+    loss(params, batch) -> scalar                       (train_step)
+    prefill(params, batch[, s_max]) -> (logits, caches) (prefill step)
+    decode_step(params, token, caches, idx) -> (logits, caches)
+    init_cache(batch, s_max) -> caches
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import LM
+from repro.models.vlm import VLM
+from repro.runtime import Runtime
+
+
+def build_model(cfg: ArchConfig, rt: Runtime = Runtime()):
+    if cfg.is_enc_dec:
+        return EncDecLM(cfg, rt)
+    if cfg.num_prefix_tokens > 0:
+        return VLM(cfg, rt)
+    return LM(cfg, rt)

@@ -1,0 +1,408 @@
+"""Attention blocks: GQA/MQA, sliding-window, and MLA — prefill + decode.
+
+The softmax attention core is a *chunked* (flash-style) pure-JAX
+implementation: a ``lax.scan`` over query blocks keeps the live score tensor
+at ``(B, H, q_chunk, Skv)`` so 32k-token prefill lowers without materializing
+the full S×S score matrix. ``repro.kernels.flash_attention`` is the Pallas
+TPU version of the same computation (same oracle).
+
+Caches (DESIGN.md §6):
+  * dense:  ``k``/``v`` ``(B, S_max, Hkv, dh)`` + per-request ``idx (B,)``;
+            sharded batch→data, seq→model (context parallel on the TP axis).
+  * swa:    ring buffer ``(B, window, Hkv, dh)`` + absolute-position array
+            ``kpos (B, window)`` (−1 = empty); rope is applied at write time.
+  * mla:    latent ``c_kv (B, S_max, kv_rank)`` + shared ``k_rope``; decode
+            runs the *absorbed* form (attention in latent space).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, dense_init
+
+NEG_INF = -2.3819763e38  # min bf16-representable-ish; safely below any score
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention core
+# ---------------------------------------------------------------------------
+
+
+def _pick_chunk(s: int, target: int = 256) -> int:
+    c = min(s, target)
+    while s % c:
+        c //= 2
+    return max(c, 1)
+
+
+def attention_core(
+    q: jnp.ndarray,           # (B, Sq, H, dh)
+    k: jnp.ndarray,           # (B, Skv, Hkv, dh)
+    v: jnp.ndarray,           # (B, Skv, Hkv, dv)
+    *,
+    q_positions: jnp.ndarray,   # (B, Sq) absolute positions
+    kv_positions: jnp.ndarray,  # (B, Skv) absolute positions (−1 = masked)
+    causal: bool = True,
+    window: int = 0,
+    prefix_len: int = 0,   # prefix-LM: bidirectional attention inside prefix
+    scale: Optional[float] = None,
+    q_chunk: int = 256,
+) -> jnp.ndarray:
+    B, Sq, H, dh = q.shape
+    _, Skv, Hkv, dv = v.shape
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+
+    qg = q.reshape(B, Sq, Hkv, G, dh)
+
+    def block(q_blk, qpos_blk):
+        # q_blk: (B, qc, Hkv, G, dh); scores (B, Hkv, G, qc, Skv) in f32
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k,
+                       preferred_element_type=jnp.float32) * scale
+        valid = (kv_positions >= 0)[:, None, None, None, :]
+        if causal:
+            rel = (kv_positions[:, None, :] <= qpos_blk[:, :, None])
+            if prefix_len:
+                both = ((kv_positions[:, None, :] < prefix_len)
+                        & (qpos_blk[:, :, None] < prefix_len))
+                rel = rel | both
+            valid = valid & rel[:, None, None, :, :]
+            if window:
+                near = (kv_positions[:, None, :]
+                        > qpos_blk[:, :, None] - window)
+                valid = valid & near[:, None, None, :, :]
+        s = jnp.where(valid, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+        return o.reshape(q_blk.shape[0], q_blk.shape[1], H, dv)
+
+    qc = _pick_chunk(Sq, q_chunk)
+    if qc == Sq:
+        return block(qg, q_positions)
+
+    n = Sq // qc
+    qg_s = qg.reshape(B, n, qc, Hkv, G, dh).transpose(1, 0, 2, 3, 4, 5)
+    qpos_s = q_positions.reshape(B, n, qc).transpose(1, 0, 2)
+
+    def body(_, xs):
+        qb, pb = xs
+        return None, block(qb, pb)
+
+    _, outs = jax.lax.scan(body, None, (qg_s, qpos_s))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, dv)
+
+
+# ---------------------------------------------------------------------------
+# Standard GQA / MQA / SWA attention block
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, H, Hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, H * dh), dtype=dtype),
+        "wk": dense_init(ks[1], (d, Hkv * dh), dtype=dtype),
+        "wv": dense_init(ks[2], (d, Hkv * dh), dtype=dtype),
+        "wo": dense_init(ks[3], (H * dh, d), in_axis_size=H * dh, dtype=dtype),
+    }
+
+
+def _project_qkv(params, x, cfg: ArchConfig, positions, dtype):
+    B, S, _ = x.shape
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ params["wq"].astype(dtype)).reshape(B, S, H, dh)
+    k = (x @ params["wk"].astype(dtype)).reshape(B, S, Hkv, dh)
+    v = (x @ params["wv"].astype(dtype)).reshape(B, S, Hkv, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_forward(params, x, cfg: ArchConfig, *, window: int = 0,
+                      prefix_len: int = 0,
+                      positions: Optional[jnp.ndarray] = None):
+    """Training / prefill forward (no cache returned)."""
+    B, S, _ = x.shape
+    dtype = x.dtype
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(params, x, cfg, positions, dtype)
+    o = attention_core(q, k, v, q_positions=positions, kv_positions=positions,
+                       causal=True, window=window, prefix_len=prefix_len)
+    return o.reshape(B, S, -1) @ params["wo"].astype(dtype)
+
+
+# ----- caches ---------------------------------------------------------------
+
+
+def init_dense_cache(cfg: ArchConfig, batch: int, s_max: int, dtype):
+    Hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, s_max, Hkv, dh), dtype),
+        "v": jnp.zeros((batch, s_max, Hkv, dh), dtype),
+    }
+
+
+def init_swa_cache(cfg: ArchConfig, batch: int, window: int, dtype):
+    Hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, window, Hkv, dh), dtype),
+        "v": jnp.zeros((batch, window, Hkv, dh), dtype),
+        "kpos": jnp.full((batch, window), -1, jnp.int32),
+    }
+
+
+def _write_at(buf, new, idx):
+    """Per-request dynamic update: buf (B, S, ...), new (B, 1, ...), idx (B,)."""
+    def one(b, n, i):
+        return jax.lax.dynamic_update_slice_in_dim(b, n, i, axis=0)
+    return jax.vmap(one)(buf, new, idx)
+
+
+def attention_prefill(params, x, cfg: ArchConfig, *, window: int = 0,
+                      s_max: Optional[int] = None):
+    """Forward + build the decode cache. Returns (out, cache)."""
+    B, S, _ = x.shape
+    dtype = x.dtype
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(params, x, cfg, positions, dtype)
+    o = attention_core(q, k, v, q_positions=positions, kv_positions=positions,
+                       causal=True, window=window)
+    out = o.reshape(B, S, -1) @ params["wo"].astype(dtype)
+
+    if window:
+        W = window
+        cache = init_swa_cache(cfg, B, W, dtype)
+        take = min(S, W)
+        pos = jnp.arange(S - take, S)
+        slots = pos % W
+        cache = {
+            "k": cache["k"].at[:, slots].set(k[:, S - take:]),
+            "v": cache["v"].at[:, slots].set(v[:, S - take:]),
+            "kpos": cache["kpos"].at[:, slots].set(
+                jnp.broadcast_to(pos, (B, take))),
+        }
+    else:
+        s_max = s_max or S
+        cache = init_dense_cache(cfg, B, s_max, dtype)
+        cache = {
+            "k": cache["k"].at[:, :S].set(k),
+            "v": cache["v"].at[:, :S].set(v),
+        }
+    return out, cache
+
+
+def attention_decode(params, x, cache, idx, cfg: ArchConfig, *,
+                     window: int = 0):
+    """One decode step. x: (B, 1, d); idx: (B,) position of the new token.
+    Returns (out, new_cache)."""
+    B, _, _ = x.shape
+    dtype = x.dtype
+    positions = idx[:, None]
+    q, k, v = _project_qkv(params, x, cfg, positions, dtype)
+
+    if window:
+        W = cache["k"].shape[1]
+        slot = (idx % W)[:, None]
+        new_cache = {
+            "k": _write_at(cache["k"], k, slot[:, 0]),
+            "v": _write_at(cache["v"], v, slot[:, 0]),
+            "kpos": jax.vmap(
+                lambda kp, s, i: kp.at[s].set(i))(cache["kpos"], slot[:, 0], idx),
+        }
+        kv_pos = new_cache["kpos"]
+    else:
+        new_cache = {
+            "k": _write_at(cache["k"], k, idx),
+            "v": _write_at(cache["v"], v, idx),
+        }
+        S_max = cache["k"].shape[1]
+        base = jnp.arange(S_max)[None, :]
+        kv_pos = jnp.where(base <= idx[:, None], base, -1)
+
+    o = attention_core(q, new_cache["k"], new_cache["v"],
+                       q_positions=positions, kv_positions=kv_pos,
+                       causal=True, window=window)
+    out = o.reshape(B, 1, -1) @ params["wo"].astype(dtype)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ArchConfig, dtype=jnp.float32):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), dtype=dtype),
+        "q_norm": jnp.zeros((m.q_lora_rank,), dtype),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, H * qk),
+                           in_axis_size=m.q_lora_rank, dtype=dtype),
+        # d -> kv latent + shared rope key
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                            dtype=dtype),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), dtype),
+        # latent -> per-head nope-key and value
+        "wk_b": dense_init(ks[3], (m.kv_lora_rank, H * m.qk_nope_head_dim),
+                           in_axis_size=m.kv_lora_rank, dtype=dtype),
+        "wv_b": dense_init(ks[4], (m.kv_lora_rank, H * m.v_head_dim),
+                           in_axis_size=m.kv_lora_rank, dtype=dtype),
+        "wo": dense_init(ks[5], (H * m.v_head_dim, d),
+                         in_axis_size=H * m.v_head_dim, dtype=dtype),
+    }
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    out = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def _mla_q(params, x, cfg, positions, dtype):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    cq = _rms(x @ params["wq_a"].astype(dtype), params["q_norm"])
+    q = (cq @ params["wq_b"].astype(dtype)).reshape(
+        B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latents(params, x, cfg, positions, dtype):
+    m = cfg.mla
+    ckv_full = x @ params["wkv_a"].astype(dtype)
+    c_kv, k_rope = jnp.split(ckv_full, [m.kv_lora_rank], axis=-1)
+    c_kv = _rms(c_kv, params["kv_norm"])
+    # shared (per-token, head-broadcast) rope key
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_forward(params, x, cfg: ArchConfig,
+                positions: Optional[jnp.ndarray] = None):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dtype = x.dtype
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q_nope, q_rope = _mla_q(params, x, cfg, positions, dtype)
+    c_kv, k_rope = _mla_latents(params, x, cfg, positions, dtype)
+    k_nope = (c_kv @ params["wk_b"].astype(dtype)).reshape(
+        B, S, H, m.qk_nope_head_dim)
+    v = (c_kv @ params["wv_b"].astype(dtype)).reshape(B, S, H, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, m.qk_rope_head_dim))], -1)
+    o = attention_core(
+        q, k, v, q_positions=positions, kv_positions=positions, causal=True,
+        scale=1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim))
+    return o.reshape(B, S, -1) @ params["wo"].astype(dtype)
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, s_max: int, dtype):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, s_max, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, s_max, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_prefill(params, x, cfg: ArchConfig, *, s_max: Optional[int] = None):
+    B, S, _ = x.shape
+    dtype = x.dtype
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    out = mla_forward(params, x, cfg, positions)
+    c_kv, k_rope = _mla_latents(params, x, cfg, positions, dtype)
+    s_max = s_max or S
+    cache = init_mla_cache(cfg, B, s_max, dtype)
+    cache = {
+        "c_kv": cache["c_kv"].at[:, :S].set(c_kv),
+        "k_rope": cache["k_rope"].at[:, :S].set(k_rope),
+    }
+    return out, cache
+
+
+def mla_decode(params, x, cache, idx, cfg: ArchConfig):
+    """Absorbed-form decode: attention runs in the kv_rank latent space, so
+    per-step compute is O(S·kv_rank) instead of O(S·H·dh) — the production
+    MLA path. Returns (out, new_cache)."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    dtype = x.dtype
+    positions = idx[:, None]
+
+    q_nope, q_rope = _mla_q(params, x, cfg, positions, dtype)  # (B,1,H,·)
+    c_new, kr_new = _mla_latents(params, x, cfg, positions, dtype)
+    cache = {
+        "c_kv": _write_at(cache["c_kv"], c_new, idx),
+        "k_rope": _write_at(cache["k_rope"], kr_new, idx),
+    }
+    c_kv, k_rope = cache["c_kv"], cache["k_rope"]  # (B,S,r), (B,S,rr)
+    S_max = c_kv.shape[1]
+
+    # absorb W_k_b into the query: q_lat (B,1,H,r)
+    wk_b = params["wk_b"].astype(dtype).reshape(m.kv_lora_rank, H,
+                                                m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, wk_b)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s = (jnp.einsum("bqhr,bkr->bhqk", q_lat, c_kv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope,
+                      preferred_element_type=jnp.float32)) * scale
+    base = jnp.arange(S_max)[None, :]
+    valid = (base <= idx[:, None])[:, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhqk,bkr->bqhr", p.astype(dtype), c_kv)
+    wv_b = params["wv_b"].astype(dtype).reshape(m.kv_lora_rank, H, m.v_head_dim)
+    o = jnp.einsum("bqhr,rhd->bqhd", o_lat, wv_b)
+    out = o.reshape(B, 1, -1) @ params["wo"].astype(dtype)
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def init_cross_attention(key, cfg: ArchConfig, dtype=jnp.float32):
+    return init_attention(key, cfg, dtype)
+
+
+def cross_attention_kv(params, enc_out, cfg: ArchConfig):
+    """Precompute encoder K/V once per request (prefill of the cross cache)."""
+    B, T, _ = enc_out.shape
+    Hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    dtype = enc_out.dtype
+    k = (enc_out @ params["wk"].astype(dtype)).reshape(B, T, Hkv, dh)
+    v = (enc_out @ params["wv"].astype(dtype)).reshape(B, T, Hkv, dh)
+    return {"k": k, "v": v}
+
+
+def cross_attention(params, x, cross_kv, cfg: ArchConfig):
+    B, S, _ = x.shape
+    H, dh = cfg.num_heads, cfg.resolved_head_dim
+    dtype = x.dtype
+    q = (x @ params["wq"].astype(dtype)).reshape(B, S, H, dh)
+    T = cross_kv["k"].shape[1]
+    qpos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    kpos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    o = attention_core(q, cross_kv["k"], cross_kv["v"], q_positions=qpos,
+                       kv_positions=kpos, causal=False)
+    return o.reshape(B, S, -1) @ params["wo"].astype(dtype)

@@ -1,0 +1,41 @@
+"""Parameter counting via ``jax.eval_shape`` over the real init functions —
+exact by construction, no allocation (works for arctic-480b's ~0.5T params).
+
+``active_only=True`` scales MoE expert tensors by top_k/num_experts for the
+MODEL_FLOPS = 6·N_active·D roofline convention.
+"""
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import jax
+
+
+@lru_cache(maxsize=None)
+def _count(cfg, active_only: bool) -> int:
+    # late imports to avoid config <-> model import cycles
+    from repro.models.api import build_model
+    from repro.runtime import Runtime
+
+    model = build_model(cfg, Runtime())
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+
+    moe_frac = 1.0
+    if cfg.moe is not None and active_only:
+        moe_frac = cfg.moe.top_k / cfg.moe.num_experts
+
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = math.prod(leaf.shape)
+        keys = [str(getattr(p, "key", getattr(p, "name", "")))
+                for p in path]
+        is_expert = any(k in ("w_up", "w_down", "w_gate") for k in keys) and \
+            any(k == "ffn" for k in keys) and cfg.moe is not None and \
+            not any(k == "dense" for k in keys)
+        total += int(n * (moe_frac if is_expert else 1.0))
+    return total
+
+
+def arch_param_count(cfg, active_only: bool = False) -> int:
+    return _count(cfg, active_only)

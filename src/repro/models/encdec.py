@@ -1,0 +1,224 @@
+"""Encoder-decoder LM (whisper-tiny). The audio conv frontend is a STUB per
+the assignment: ``input_specs()`` supplies precomputed frame embeddings
+``(B, T_enc, d_model)``. Backbone only: encoder self-attention is
+non-causal; the decoder adds causal self-attention (cached at decode) and
+cross-attention whose K/V are computed once at prefill.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models.layers import apply_norm, embed_init, init_norm
+from repro.models.transformer import chunked_ce_loss
+from repro.runtime import Runtime
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+
+def init_enc_block(key, cfg: ArchConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": init_norm(cfg.norm, cfg.d_model, dtype),
+        "attn": attn.init_attention(k1, cfg, dtype),
+        "norm2": init_norm(cfg.norm, cfg.d_model, dtype),
+        "ffn": ffn_mod.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def enc_block_forward(params, x, cfg: ArchConfig):
+    B, T, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    h = apply_norm(cfg.norm, params["norm1"], x)
+    dtype = x.dtype
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (h @ params["attn"]["wq"].astype(dtype)).reshape(B, T, H, dh)
+    k = (h @ params["attn"]["wk"].astype(dtype)).reshape(B, T, Hkv, dh)
+    v = (h @ params["attn"]["wv"].astype(dtype)).reshape(B, T, Hkv, dh)
+    o = attn.attention_core(q, k, v, q_positions=pos, kv_positions=pos,
+                            causal=False)
+    x = x + o.reshape(B, T, -1) @ params["attn"]["wo"].astype(dtype)
+    h = apply_norm(cfg.norm, params["norm2"], x)
+    x = x + ffn_mod.mlp_forward(params["ffn"], h, cfg.act)
+    return sharding.shard(x, sharding.BATCH_AXES, None, None)
+
+
+# ---------------------------------------------------------------------------
+# Decoder block = causal self-attn + cross-attn + FFN
+# ---------------------------------------------------------------------------
+
+
+def init_dec_block(key, cfg: ArchConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": init_norm(cfg.norm, cfg.d_model, dtype),
+        "self": attn.init_attention(k1, cfg, dtype),
+        "norm_x": init_norm(cfg.norm, cfg.d_model, dtype),
+        "cross": attn.init_cross_attention(k2, cfg, dtype),
+        "norm2": init_norm(cfg.norm, cfg.d_model, dtype),
+        "ffn": ffn_mod.init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def dec_block_forward(params, x, cross_kv, cfg: ArchConfig):
+    h = apply_norm(cfg.norm, params["norm1"], x)
+    x = x + attn.attention_forward(params["self"], h, cfg)
+    h = apply_norm(cfg.norm, params["norm_x"], x)
+    x = x + attn.cross_attention(params["cross"], h, cross_kv, cfg)
+    h = apply_norm(cfg.norm, params["norm2"], x)
+    x = x + ffn_mod.mlp_forward(params["ffn"], h, cfg.act)
+    return sharding.shard(x, sharding.BATCH_AXES, None, None)
+
+
+def dec_block_prefill(params, x, cross_kv, cfg: ArchConfig, s_max: int):
+    h = apply_norm(cfg.norm, params["norm1"], x)
+    mixed, cache = attn.attention_prefill(params["self"], h, cfg, s_max=s_max)
+    x = x + mixed
+    h = apply_norm(cfg.norm, params["norm_x"], x)
+    x = x + attn.cross_attention(params["cross"], h, cross_kv, cfg)
+    h = apply_norm(cfg.norm, params["norm2"], x)
+    x = x + ffn_mod.mlp_forward(params["ffn"], h, cfg.act)
+    return sharding.shard(x, sharding.BATCH_AXES, None, None), cache
+
+
+def dec_block_decode(params, x, cache, cross_kv, idx, cfg: ArchConfig):
+    h = apply_norm(cfg.norm, params["norm1"], x)
+    mixed, cache = attn.attention_decode(params["self"], h, cache, idx, cfg)
+    x = x + mixed
+    h = apply_norm(cfg.norm, params["norm_x"], x)
+    x = x + attn.cross_attention(params["cross"], h, cross_kv, cfg)
+    h = apply_norm(cfg.norm, params["norm2"], x)
+    x = x + ffn_mod.mlp_forward(params["ffn"], h, cfg.act)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# EncDecLM
+# ---------------------------------------------------------------------------
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig, rt: Runtime = Runtime()):
+        assert cfg.encoder is not None
+        self.cfg = cfg
+        self.rt = rt
+
+    def init(self, key) -> Params:
+        cfg, dtype = self.cfg, self.rt.pdtype
+        k1, k2, k3 = jax.random.split(key, 3)
+        enc_blocks = jax.vmap(lambda k: init_enc_block(k, cfg, dtype))(
+            jax.random.split(k1, cfg.encoder.num_layers))
+        dec_blocks = jax.vmap(lambda k: init_dec_block(k, cfg, dtype))(
+            jax.random.split(k2, cfg.num_layers))
+        return {
+            "embed": embed_init(k3, (cfg.vocab_size, cfg.d_model), dtype),
+            "enc_blocks": enc_blocks,
+            "enc_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+            "dec_blocks": dec_blocks,
+            "dec_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        }
+
+    # ----- encoder -----
+    def encode(self, params, src_embed):
+        cfg = self.cfg
+        x = src_embed.astype(self.rt.dtype)
+        x = sharding.shard(x, sharding.BATCH_AXES, None, None)
+
+        def body(x, p):
+            return enc_block_forward(p, x, cfg), None
+
+        if self.rt.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        return apply_norm(cfg.norm, params["enc_norm"], x)
+
+    def _cross_kvs(self, params, enc_out):
+        cfg = self.cfg
+
+        def body(_, p):
+            return None, attn.cross_attention_kv(p["cross"], enc_out, cfg)
+
+        _, kvs = jax.lax.scan(body, None, params["dec_blocks"])
+        return kvs  # stacked over layers
+
+    # ----- training -----
+    def loss(self, params, batch) -> jnp.ndarray:
+        cfg, rt = self.cfg, self.rt
+        tokens, labels = batch["tokens"], batch["labels"]
+        mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+        enc_out = self.encode(params, batch["src_embed"])
+        cross_kvs = self._cross_kvs(params, enc_out)
+        x = params["embed"].astype(rt.dtype)[tokens]
+        x = sharding.shard(x, sharding.BATCH_AXES, None, None)
+
+        def body(x, inp):
+            p, kv = inp
+            return dec_block_forward(p, x, kv, cfg), None
+
+        if rt.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, (params["dec_blocks"], cross_kvs))
+        x = apply_norm(cfg.norm, params["dec_norm"], x)
+        return chunked_ce_loss(x, params["embed"], labels, mask, cfg, rt,
+                               tied=True)
+
+    # ----- serving -----
+    def prefill(self, params, batch, s_max: Optional[int] = None):
+        cfg, rt = self.cfg, self.rt
+        tokens = batch["tokens"]
+        s_max = s_max or tokens.shape[1]
+        enc_out = self.encode(params, batch["src_embed"])
+        cross_kvs = self._cross_kvs(params, enc_out)
+        x = params["embed"].astype(rt.dtype)[tokens]
+
+        def body(x, inp):
+            p, kv = inp
+            x, cache = dec_block_prefill(p, x, kv, cfg, s_max)
+            return x, cache
+
+        x, self_caches = jax.lax.scan(body, x, (params["dec_blocks"],
+                                                cross_kvs))
+        x = apply_norm(cfg.norm, params["dec_norm"], x[:, -1:])
+        logits = x @ params["embed"].astype(rt.dtype).T
+        caches = {"self": self_caches, "cross": cross_kvs}
+        return logits.astype(jnp.float32), caches
+
+    def decode_step(self, params, token, caches, idx):
+        cfg, rt = self.cfg, self.rt
+        x = params["embed"].astype(rt.dtype)[token]
+
+        def body(x, inp):
+            p, cache, kv = inp
+            x, cache = dec_block_decode(p, x, cache, kv, idx, cfg)
+            return x, cache
+
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec_blocks"], caches["self"], caches["cross"]))
+        x = apply_norm(cfg.norm, params["dec_norm"], x)
+        logits = x @ params["embed"].astype(rt.dtype).T
+        return logits.astype(jnp.float32), {"self": new_self,
+                                            "cross": caches["cross"]}
+
+    def init_cache(self, batch: int, s_max: int):
+        cfg = self.cfg
+        one = attn.init_dense_cache(cfg, batch, s_max, self.rt.dtype)
+        self_caches = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), one)
+        T = cfg.encoder.max_source_len
+        Hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        cross = {
+            "k": jnp.zeros((cfg.num_layers, batch, T, Hkv, dh), self.rt.dtype),
+            "v": jnp.zeros((cfg.num_layers, batch, T, Hkv, dh), self.rt.dtype),
+        }
+        return {"self": self_caches, "cross": cross}

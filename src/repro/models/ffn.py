@@ -1,0 +1,171 @@
+"""FFN blocks: dense (gated / non-gated) MLP and capacity-bounded top-k MoE.
+
+MoE follows the GShard/Mesh-TF formulation: tokens are reshaped into
+``(groups, group_size)`` and dispatched to experts with a one-hot
+capacity-bounded dispatch tensor. Experts shard over the ``model`` axis
+(expert parallelism); groups shard over the data axes — XLA lowers the
+dispatch/return einsums into all-to-alls on the production mesh.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models.layers import activation, dense_init, gated
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), in_axis_size=d_ff,
+                             dtype=dtype),
+    }
+    if gated(act):
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), dtype=dtype)
+    return p
+
+
+def mlp_forward(params, x, act: str):
+    dtype = x.dtype
+    h = x @ params["w_up"].astype(dtype)
+    if gated(act):
+        h = activation(act, x @ params["w_gate"].astype(dtype)) * h
+    else:
+        h = activation(act, h)
+    return h @ params["w_down"].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ArchConfig, dtype=jnp.float32):
+    m = cfg.moe
+    d, f, E = cfg.d_model, cfg.d_ff, m.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), dtype=jnp.float32),  # f32 router
+        "w_up": dense_init(ks[1], (E, d, f), in_axis_size=d, dtype=dtype),
+        "w_down": dense_init(ks[2], (E, f, d), in_axis_size=f, dtype=dtype),
+    }
+    if gated(cfg.act):
+        p["w_gate"] = dense_init(ks[3], (E, d, f), in_axis_size=d, dtype=dtype)
+    if m.dense_residual_d_ff:
+        p["dense"] = init_mlp(ks[4], d, m.dense_residual_d_ff, cfg.act, dtype)
+    return p
+
+
+def _top2_dispatch(probs: jnp.ndarray, capacity: int):
+    """GShard top-2 dispatch. probs: (G, g, E) f32.
+
+    Returns (dispatch (G,g,E,C) bool, combine (G,g,E,C) f32, aux_loss)."""
+    G, g, E = probs.shape
+    idx1 = jnp.argmax(probs, -1)
+    mask1 = jax.nn.one_hot(idx1, E, dtype=probs.dtype)
+    probs_wo1 = probs * (1.0 - mask1)
+    idx2 = jnp.argmax(probs_wo1, -1)
+    mask2 = jax.nn.one_hot(idx2, E, dtype=probs.dtype)
+
+    # load-balancing auxiliary loss (Switch/GShard)
+    density = jnp.mean(mask1, axis=1)              # (G, E) fraction routed
+    density_proxy = jnp.mean(probs, axis=1)        # (G, E) mean router prob
+    aux = jnp.mean(density * density_proxy) * (E * E)
+
+    # capacity-bounded positions inside each expert buffer
+    pos1 = jnp.cumsum(mask1, axis=1) * mask1 - mask1          # 0-based
+    mask1 = mask1 * (pos1 < capacity)
+    # second choice queues behind all first choices
+    count1 = jnp.sum(mask1, axis=1, keepdims=True)
+    pos2 = (jnp.cumsum(mask2, axis=1) * mask2 - mask2) + count1
+    mask2 = mask2 * (pos2 < capacity)
+
+    gate1 = jnp.sum(probs * mask1, -1)
+    gate2 = jnp.sum(probs * mask2, -1)
+    denom = jnp.maximum(gate1 + gate2, 1e-9)
+    gate1, gate2 = gate1 / denom, gate2 / denom
+
+    def onehot_pos(pos, mask):
+        # (G,g,E) position -> (G,g,E,C) one-hot, zeroed where not routed
+        oh = jax.nn.one_hot(pos.astype(jnp.int32), capacity, dtype=probs.dtype)
+        return oh * mask[..., None]
+
+    d1 = onehot_pos(pos1, mask1)
+    d2 = onehot_pos(pos2, mask2)
+    combine = gate1[..., None, None] * d1 + gate2[..., None, None] * d2
+    dispatch = (d1 + d2) > 0.0
+    return dispatch, combine, aux
+
+
+def moe_forward(params, x, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    dtype = x.dtype
+    E = m.num_experts
+    g = min(m.group_size, B * S)
+    while (B * S) % g:  # shrink until it divides (small/odd batches)
+        g //= 2
+    G = (B * S) // g
+    xt = x.reshape(G, g, d)
+    xt = sharding.shard(xt, sharding.BATCH_AXES, None, None)
+
+    logits = xt.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    capacity = max(1, int(g * m.top_k / E * m.capacity_factor))
+    dispatch, combine, aux = _top2_dispatch(probs, capacity)
+
+    # EP when experts divide the TP axis (arctic: 128/16); otherwise shard
+    # the expert FFN's hidden dim instead (mixtral: 8 experts < 16 chips —
+    # expert-TP avoids 2× padding waste). See launch/specs.py param rules.
+    tp = sharding.tp_size(sharding.current_mesh())
+    ep = tp > 1 and E % tp == 0
+    e_ax = sharding.MODEL_AXIS if ep else None
+    f_ax = None if ep else sharding.MODEL_AXIS
+
+    # dispatch: tokens -> expert buffers (E, G, C, d)
+    einp = jnp.einsum("gsec,gsd->egcd", dispatch.astype(dtype), xt)
+    einp = sharding.shard(einp, e_ax, sharding.BATCH_AXES, None, None)
+
+    h = jnp.einsum("egcd,edf->egcf", einp, params["w_up"].astype(dtype))
+    h = sharding.shard(h, e_ax, sharding.BATCH_AXES, None, f_ax)
+    if gated(cfg.act):
+        gate = jnp.einsum("egcd,edf->egcf", einp,
+                          params["w_gate"].astype(dtype))
+        h = activation(cfg.act, gate) * h
+    else:
+        h = activation(cfg.act, h)
+    eout = jnp.einsum("egcf,efd->egcd", h, params["w_down"].astype(dtype))
+    eout = sharding.shard(eout, e_ax, sharding.BATCH_AXES, None, None)
+
+    out = jnp.einsum("gsec,egcd->gsd", combine.astype(dtype), eout)
+    out = out.reshape(B, S, d)
+    if m.dense_residual_d_ff:
+        out = out + mlp_forward(params["dense"], x, cfg.act)
+    return out, aux.astype(jnp.float32)
+
+
+def ffn_forward(params, x, cfg: ArchConfig):
+    """Unified FFN entry: returns (out, aux_loss)."""
+    if cfg.moe is not None:
+        return moe_forward(params, x, cfg)
+    if cfg.d_ff == 0:  # attn-free mamba2 has no FFN block
+        return jnp.zeros_like(x), jnp.float32(0.0)
+    return mlp_forward(params, x, cfg.act), jnp.float32(0.0)
+
+
+def init_ffn(key, cfg: ArchConfig, dtype=jnp.float32):
+    if cfg.moe is not None:
+        return init_moe(key, cfg, dtype)
+    if cfg.d_ff == 0:
+        return {}
+    return init_mlp(key, cfg.d_model, cfg.d_ff, cfg.act, dtype)

@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ u_t),   a_t = a^{c·r_t}
+
+Training/prefill evaluates the linear recurrence with a log-depth
+``associative_scan``; decode is the O(1) stateful step. Gates use
+per-channel (diagonal) weights — a simplification of Griffin's
+block-diagonal gates, noted in DESIGN.md. Sequence-local (no TP collective);
+CAIS applies to the in/out projections (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+
+_C = 8.0  # Griffin's recurrence-gate temperature
+
+
+def _lru_width(cfg: ArchConfig) -> int:
+    return cfg.rglru.block_width or cfg.rglru.lru_width or cfg.d_model
+
+
+def init_rglru(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    w = _lru_width(cfg)
+    cw = cfg.rglru.conv_width
+    ks = jax.random.split(key, 4)
+    return {
+        "w_y": dense_init(ks[0], (d, w), dtype=dtype),       # gate branch
+        "w_x": dense_init(ks[1], (d, w), dtype=dtype),       # recurrence branch
+        "conv_w": dense_init(ks[2], (cw, w), in_axis_size=cw, dtype=dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "gate_a_w": jnp.zeros((w,), jnp.float32),
+        "gate_a_b": jnp.zeros((w,), jnp.float32),
+        "gate_i_w": jnp.zeros((w,), jnp.float32),
+        "gate_i_b": jnp.zeros((w,), jnp.float32),
+        # a = sigmoid(Λ); init so a^c ≈ 0.9..0.999 over channels
+        "Lambda": jnp.linspace(2.0, 6.0, w).astype(jnp.float32),
+        "w_out": dense_init(ks[3], (w, d), in_axis_size=w, dtype=dtype),
+    }
+
+
+def _gates(params, u):
+    """u: (..., w) conv output. Returns (log_a, gated_input) in f32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * params["gate_a_w"] + params["gate_a_b"])
+    i = jax.nn.sigmoid(uf * params["gate_i_w"] + params["gate_i_b"])
+    log_a = -_C * r * jax.nn.softplus(params["Lambda"])   # log(a^{c·r}) ≤ 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * i * uf
+
+
+def _causal_conv(x, w, b, x0=None):
+    width = w.shape[0]
+    if x0 is not None:
+        ext = jnp.concatenate([x0.astype(x.dtype), x], axis=1)
+    else:
+        ext = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(ext[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return out + b[None, None, :]
+
+
+def rglru_forward(params, x, cfg: ArchConfig, h0=None, conv0=None,
+                  return_state: bool = False):
+    """x: (B,S,d) -> (B,S,d) [, (h_state, conv_state)]."""
+    dtype = x.dtype
+    y = jax.nn.gelu(x @ params["w_y"].astype(dtype), approximate=True)
+    u = x @ params["w_x"].astype(dtype)
+    uc = _causal_conv(u, params["conv_w"].astype(dtype),
+                      params["conv_b"].astype(dtype), x0=conv0)
+
+    a, bu = _gates(params, uc)                 # f32 (B,S,w)
+    if h0 is not None:
+        # fold the carried state into step 0: b0' = a0·h0 + b0
+        bu = bu.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bu), axis=1)
+    out = (h.astype(dtype) * y) @ params["w_out"].astype(dtype)
+    if return_state:
+        cw = cfg.rglru.conv_width
+        S = x.shape[1]
+        conv_state = u[:, -(cw - 1):, :] if S >= cw - 1 else \
+            jnp.pad(u, ((0, 0), (cw - 1 - S, 0), (0, 0)))
+        return out, (h[:, -1].astype(dtype), conv_state)
+    return out
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, dtype):
+    w = _lru_width(cfg)
+    cw = cfg.rglru.conv_width
+    return {
+        "h": jnp.zeros((batch, w), dtype),
+        "conv": jnp.zeros((batch, cw - 1, w), dtype),
+    }
+
+
+def rglru_decode(params, x, cache, cfg: ArchConfig):
+    """One-token step. x: (B,1,d). Returns (out, new_cache)."""
+    dtype = x.dtype
+    xt = x[:, 0]
+    y = jax.nn.gelu(xt @ params["w_y"].astype(dtype), approximate=True)
+    u = xt @ params["w_x"].astype(dtype)
+
+    window = jnp.concatenate([cache["conv"].astype(dtype), u[:, None]], 1)
+    w = params["conv_w"].astype(dtype)
+    uc = jnp.einsum("bwc,wc->bc", window, w) + params["conv_b"].astype(dtype)
+
+    a, bu = _gates(params, uc)
+    h = a * cache["h"].astype(jnp.float32) + bu
+    out = ((h.astype(dtype) * y) @ params["w_out"].astype(dtype))[:, None]
+    return out, {"h": h.astype(dtype), "conv": window[:, 1:]}

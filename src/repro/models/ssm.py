@@ -1,0 +1,230 @@
+"""Mamba-2 SSD mixer (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked dual form: quadratic attention-like compute
+inside chunks + a linear recurrence across chunk states (a ``lax.scan``).
+Decode is the O(1)-per-token stateful step. The recurrence is sequence-local
+(no TP collective) — CAIS applies to the in/out projections only
+(DESIGN.md §5, arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+
+NEG_INF = -1e30
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, nheads, conv_ch
+
+
+def init_ssm(key, cfg: ArchConfig, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nheads, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    # in_proj -> [z (d_inner), xBC (conv_ch), dt (nheads)]
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * d_inner + 2 * s.n_groups * s.d_state
+                                   + nheads), dtype=dtype),
+        "conv_w": dense_init(ks[1], (s.conv_width, conv_ch),
+                             in_axis_size=s.conv_width, dtype=dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "norm_scale": jnp.zeros((d_inner,), dtype),
+        "w_out": dense_init(ks[2], (d_inner, d), in_axis_size=d_inner,
+                            dtype=dtype),
+    }
+
+
+def _segsum(x):
+    """x: (..., l) -> (..., l, l) with S[i,j] = sum_{k=j+1..i} x[k] (j<=i)."""
+    cs = jnp.cumsum(x, -1)
+    S = cs[..., :, None] - cs[..., None, :]
+    l = x.shape[-1]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, S, NEG_INF)
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int, h0=None):
+    """Chunked SSD. x: (b,s,h,p); dt: (b,s,h) post-softplus; A: (h,) negative;
+    B,C: (b,s,g,n). Returns (y (b,s,h,p), h_final (b,h,p,n))."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    c, l = s // chunk, chunk
+    hg = h // g  # heads per group
+
+    def cshape(t):  # (b,s,...) -> (b,c,l,...)
+        return t.reshape(b, c, l, *t.shape[2:])
+
+    xc, dtc, Bc, Cc = map(cshape, (x, dt, B, C))
+    # decay math in f32 (exp/cumsum are precision-sensitive under bf16)
+    dA = dtc.astype(jnp.float32) * A.astype(jnp.float32)[None, None, None, :]
+    dA_cs = jnp.cumsum(dA, axis=2)                        # (b,c,l,h)
+
+    # intra-chunk (the "attention-like" quadratic term)
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))        # (b,c,h,l,l)
+    CB = jnp.einsum("bclgn,bcmgn->bcglm", Cc, Bc,
+                    preferred_element_type=jnp.float32)   # (b,c,g,l,m)
+    CB = jnp.repeat(CB, hg, axis=2)                       # (b,c,h,l,m)
+    gate = (CB * L).astype(x.dtype)
+    xdt = xc * dtc.astype(x.dtype)[..., None]             # (b,c,l,h,p)
+    y_diag = jnp.einsum("bchlm,bcmhp->bclhp", gate, xdt)
+
+    # chunk states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)   # (b,c,l,h)
+    Bh = jnp.repeat(Bc, hg, axis=3).reshape(b, c, l, g, hg, n)
+    Bh = Bh.reshape(b, c, l, h, n)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", Bh,
+                        decay_states.astype(x.dtype), xdt)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])             # (b,c,h)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), x.dtype)
+
+    def step(hprev, inp):
+        dec, st = inp  # dec (b,h), st (b,h,p,n)
+        hnew = hprev * dec[..., None, None].astype(x.dtype) + st
+        return hnew, hprev
+
+    hT, hprevs = jax.lax.scan(
+        step, h0, (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)              # (b,c,h,p,n)
+
+    # inter-chunk contribution
+    Ch = jnp.repeat(Cc, hg, axis=3).reshape(b, c, l, h, n)
+    state_decay = jnp.exp(dA_cs).astype(x.dtype)          # (b,c,l,h)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", Ch, hprevs, state_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, hT
+
+
+def _split_in(proj, cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner, nheads, conv_ch = _dims(cfg)
+    z, xBC, dt = jnp.split(proj, [d_inner, d_inner + conv_ch], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, bias):
+    """Depthwise causal conv. xBC: (b,s,ch); w: (width,ch)."""
+    width = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return out + bias[None, None, :]
+
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    out = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(y.dtype)
+
+
+def ssm_forward(params, x, cfg: ArchConfig, h0=None, conv0=None,
+                return_state: bool = False):
+    """x: (B,S,d). Returns y or (y, (ssm_state, conv_state))."""
+    s = cfg.ssm
+    bsz, S, _ = x.shape
+    d_inner, nheads, conv_ch = _dims(cfg)
+    dtype = x.dtype
+
+    proj = x @ params["w_in"].astype(dtype)
+    z, xBC, dt = _split_in(proj, cfg)
+    if conv0 is not None:
+        ext = jnp.concatenate([conv0.astype(dtype), xBC], axis=1)
+        conv_out = _causal_conv(ext, params["conv_w"].astype(dtype),
+                                params["conv_b"].astype(dtype))
+        conv_out = conv_out[:, conv0.shape[1]:]
+    else:
+        conv_out = _causal_conv(xBC, params["conv_w"].astype(dtype),
+                                params["conv_b"].astype(dtype))
+    conv_out = jax.nn.silu(conv_out)
+    xs, B, C = jnp.split(conv_out, [d_inner, d_inner + s.n_groups * s.d_state],
+                         axis=-1)
+    xs = xs.reshape(bsz, S, nheads, s.head_dim)
+    B = B.reshape(bsz, S, s.n_groups, s.d_state)
+    C = C.reshape(bsz, S, s.n_groups, s.d_state)
+
+    A = -jnp.exp(params["A_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+
+    chunk = min(s.chunk_size, S)
+    while S % chunk:
+        chunk //= 2
+    if h0 is not None:
+        h0 = h0.astype(dtype)
+    y, hT = _ssd_chunked(xs, dt, A, B, C, chunk, h0=h0)
+    y = y + xs * params["D"].astype(dtype)[None, None, :, None]
+    y = y.reshape(bsz, S, d_inner)
+    y = _gated_norm(y, z, params["norm_scale"])
+    out = y @ params["w_out"].astype(dtype)
+    if return_state:
+        conv_state = xBC[:, -(s.conv_width - 1):, :] if S >= s.conv_width - 1 \
+            else jnp.pad(xBC, ((0, 0), (s.conv_width - 1 - S, 0), (0, 0)))
+        return out, (hT, conv_state)
+    return out
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype):
+    s = cfg.ssm
+    d_inner, nheads, conv_ch = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, nheads, s.head_dim, s.d_state), dtype),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def ssm_decode(params, x, cache, cfg: ArchConfig):
+    """One-token step. x: (B,1,d). Returns (y (B,1,d), new_cache)."""
+    s = cfg.ssm
+    bsz = x.shape[0]
+    d_inner, nheads, conv_ch = _dims(cfg)
+    dtype = x.dtype
+
+    proj = x[:, 0] @ params["w_in"].astype(dtype)   # (B, ·)
+    z, xBC, dt = _split_in(proj, cfg)
+
+    window = jnp.concatenate([cache["conv"].astype(dtype), xBC[:, None]], 1)
+    w = params["conv_w"].astype(dtype)
+    conv_out = jnp.einsum("bwc,wc->bc", window, w) + params["conv_b"].astype(dtype)
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+
+    xs, B, C = jnp.split(conv_out, [d_inner, d_inner + s.n_groups * s.d_state],
+                         axis=-1)
+    xs = xs.reshape(bsz, nheads, s.head_dim)
+    B = B.reshape(bsz, s.n_groups, s.d_state)
+    C = C.reshape(bsz, s.n_groups, s.d_state)
+    hg = nheads // s.n_groups
+    Bh = jnp.repeat(B, hg, axis=1)   # (B, h, n)
+    Ch = jnp.repeat(C, hg, axis=1)
+
+    A = -jnp.exp(params["A_log"])
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,h)
+    decay = jnp.exp(dt_f * A[None, :]).astype(dtype)                    # (B,h)
+
+    dx = xs * dt_f.astype(dtype)[..., None]                             # (B,h,p)
+    h_new = (cache["h"].astype(dtype) * decay[..., None, None]
+             + dx[..., None] * Bh[:, :, None, :])                       # (B,h,p,n)
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Ch)
+    y = y + xs * params["D"].astype(dtype)[None, :, None]
+    y = y.reshape(bsz, d_inner)
+    y = _gated_norm(y, z, params["norm_scale"])
+    out = (y @ params["w_out"].astype(dtype))[:, None]
+    return out, {"h": h_new, "conv": new_conv}

@@ -1,0 +1,83 @@
+"""Prefix-LM VLM (paligemma-3b). The SigLIP vision tower is a STUB per the
+assignment: ``input_specs()`` supplies precomputed patch embeddings
+``(B, num_prefix_tokens, vision_width)``; this module owns only the
+projection into the LM width and the prefix-LM masking (bidirectional
+attention among image-prefix tokens)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_norm, dense_init
+from repro.models.transformer import (
+    LM,
+    chunked_ce_loss,
+    init_stack_cache,
+    shard_stack_cache,
+    stack_decode,
+    stack_forward,
+    stack_prefill,
+)
+from repro.runtime import Runtime
+
+Params = Dict[str, Any]
+
+
+class VLM:
+    """Image-prefix + text decoder. Decode reuses the LM machinery with the
+    image prefix living in the KV cache after prefill."""
+
+    def __init__(self, cfg: ArchConfig, rt: Runtime = Runtime()):
+        assert cfg.num_prefix_tokens > 0
+        self.cfg = cfg
+        self.rt = rt
+        self.lm = LM(cfg, rt)
+
+    def init(self, key) -> Params:
+        k1, k2 = jax.random.split(key)
+        p = self.lm.init(k1)
+        p["vision_proj"] = dense_init(
+            k2, (self.cfg.vision_width, self.cfg.d_model),
+            dtype=self.rt.pdtype)
+        return p
+
+    def _embed_all(self, params, patch_embed, tokens):
+        dtype = self.rt.dtype
+        img = patch_embed.astype(dtype) @ params["vision_proj"].astype(dtype)
+        txt = params["embed"].astype(dtype)[tokens]
+        x = jnp.concatenate([img, txt], axis=1)
+        return sharding.shard(x, sharding.BATCH_AXES, None, None)
+
+    def loss(self, params, batch) -> jnp.ndarray:
+        """batch: patch_embed (B,P,Wv), tokens (B,S), labels (B,S), mask."""
+        cfg, rt = self.cfg, self.rt
+        tokens, labels = batch["tokens"], batch["labels"]
+        mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+        P = cfg.num_prefix_tokens
+        x = self._embed_all(params, batch["patch_embed"], tokens)
+        x, aux = stack_forward(params["stack"], x, cfg, rt, prefix_len=P)
+        x = apply_norm(cfg.norm, params["final_norm"], x[:, P:])
+        head, tied = self.lm._head(params)
+        return chunked_ce_loss(x, head, labels, mask, cfg, rt, tied) + 0.01 * aux
+
+    def prefill(self, params, batch, s_max: Optional[int] = None):
+        cfg, rt = self.cfg, self.rt
+        tokens = batch["tokens"]
+        P = cfg.num_prefix_tokens
+        s_max = s_max or (P + tokens.shape[1])
+        x = self._embed_all(params, batch["patch_embed"], tokens)
+        x, caches = stack_prefill(params["stack"], x, cfg, rt, s_max)
+        x = apply_norm(cfg.norm, params["final_norm"], x[:, -1:])
+        caches = shard_stack_cache(caches, cfg)
+        return self.lm.logits(params, x), caches
+
+    def decode_step(self, params, token, caches, idx):
+        """idx counts absolute position (image prefix included)."""
+        return self.lm.decode_step(params, token, caches, idx)
+
+    def init_cache(self, batch: int, s_max: int):
+        return init_stack_cache(self.cfg, batch, s_max, self.rt.dtype)

@@ -1,0 +1,21 @@
+from repro.optim.compression import (
+    compressed_psum,
+    init_error_feedback,
+    wire_bytes_saved,
+)
+from repro.optim.optimizers import (
+    Optimizer,
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    constant_schedule,
+    cosine_schedule,
+    global_norm,
+    make_optimizer,
+)
+
+__all__ = [
+    "Optimizer", "adamw", "adafactor", "make_optimizer", "cosine_schedule",
+    "constant_schedule", "clip_by_global_norm", "global_norm",
+    "compressed_psum", "init_error_feedback", "wire_bytes_saved",
+]

@@ -1,0 +1,388 @@
+"""While-aware HLO cost analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so any
+``lax.scan`` (our layer stacks, loss chunking, CAIS ring schedules) is
+undercounted by its trip count — useless for a roofline. This analyzer walks
+the post-optimization per-device HLO text and computes
+
+  * flops       — 2·numel(result)·K for dots (K = contracted extent),
+                  1/elem for elementwise math; while bodies × trip count
+  * bytes       — operand+result bytes at fusion boundaries (fused
+                  intermediates don't touch HBM — closer to TPU semantics
+                  than cost_analysis' per-op accounting)
+  * collectives — per-kind operand bytes (all-gather / all-reduce /
+                  reduce-scatter / all-to-all / collective-permute), trip-
+                  multiplied
+
+Trip counts come from the while condition computation (the s32 loop bound
+constant). Validated in tests/test_roofline.py against hand-computed scans.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# ops that are pure metadata / no real data movement
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "iota", "partition-id", "replica-id"}
+
+# ops whose operand/result bytes hit HBM even under perfect fusion
+_MEM_OPS = {"dot", "convolution", "dynamic-slice", "dynamic-update-slice",
+            "gather", "scatter", "concatenate", "copy", "sort", "pad",
+            "reverse", "reduce", "reduce-window", "select-and-scatter",
+            "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+            "collective-permute"}
+
+# elementwise-ish ops: 1 flop per output element
+_EW_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "select",
+    "compare", "convert", "floor", "ceil", "sign", "cosine", "sine",
+    "logistic", "and", "or", "xor", "not", "clamp", "remainder",
+    "exponential-minus-one", "log-plus-one", "atan2", "erf",
+    "round-nearest-afz", "round-nearest-even", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic",
+}
+
+
+def _parse_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype in _DTYPE_BYTES:
+            out.append((dtype,
+                        [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    return sum(_DTYPE_BYTES[dt] * math.prod(dims or [1])
+               for dt, dims in _parse_dims(type_str))
+
+
+def _type_numel(type_str: str) -> int:
+    return sum(math.prod(dims or [1]) for _, dims in _parse_dims(type_str))
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    args: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+
+    def by_name(self, name: str) -> Optional[Instr]:
+        for i in self.instrs:
+            if i.name == name:
+                return i
+        return None
+
+
+# tuple types may contain /*index=N*/ comments — match parens lazily up to
+# the following opcode, not by excluding '='
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:\(.*?\)|[a-z0-9]+\[[\d,]*\]\S*))\s+"
+    r"([\w\-]+)\((.*)$")
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+(?:\(.*\))?.*\{\s*$")
+
+
+_COLL_KEYS = COLLECTIVE_KINDS + ("cp_fwd", "cp_bwd")
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in _COLL_KEYS})
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in _COLL_KEYS:
+            self.coll[k] += other.coll[k] * mult
+
+    def total_coll(self) -> float:
+        return sum(self.coll[k] for k in COLLECTIVE_KINDS)
+
+    def wire_time_bytes(self) -> float:
+        """Per-direction wire bytes: collective-permutes split by ring
+        direction run on opposite full-duplex links concurrently (the CAIS
+        bidirectional schedule); other collectives counted in full (XLA's
+        internal schedule is opaque — conservative for the baseline)."""
+        other = sum(self.coll[k] for k in COLLECTIVE_KINDS
+                    if k != "collective-permute")
+        return other + max(self.coll["cp_fwd"], self.coll["cp_bwd"])
+
+
+class HLOAnalyzer:
+    """mem_mode:
+      * "fused"    — bytes counted only for ops that touch HBM under perfect
+                     elementwise fusion (_MEM_OPS) + entry params/outputs.
+                     TPU-faithful lower bound (CPU HLO wraps every
+                     elementwise op in its own micro-fusion, so boundary
+                     counting inflates ~10×).
+      * "boundary" — bytes at every non-fused instruction + fusion
+                     boundaries (upper bound; cost_analysis-like).
+    """
+
+    def __init__(self, hlo_text: str, mem_mode: str = "fused"):
+        assert mem_mode in ("fused", "boundary")
+        self.mem_mode = mem_mode
+        self.comps: Dict[str, Computation] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, Costs] = {}
+
+    # ------------------------------------------------------------------
+    def _parse(self, text: str):
+        cur: Optional[Computation] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            if cur is None:
+                m = _COMP_RE.match(line)
+                if m and "{" in line:
+                    cur = Computation(m.group(1))
+                    if line.lstrip().startswith("ENTRY"):
+                        self.entry = cur.name
+                continue
+            if line.strip() == "}":
+                self.comps[cur.name] = cur
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                name, type_str, op, args = m.groups()
+                cur.instrs.append(Instr(name, type_str, op, args, line))
+        if cur is not None:
+            self.comps[cur.name] = cur
+
+    # ------------------------------------------------------------------
+    def _trip_count(self, cond_name: str) -> int:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        best = 1
+        for i in comp.instrs:
+            if i.op == "constant" and i.type_str.startswith(("s32[]", "s64[]",
+                                                             "u32[]")):
+                m = re.search(r"constant\((\d+)\)", i.line)
+                if m:
+                    best = max(best, int(m.group(1)))
+        return best
+
+    @staticmethod
+    def _permute_fwd(instr: Instr) -> bool:
+        """Ring direction from source_target_pairs: (i → i+1 mod n) pairs
+        are the forward ring, (i → i−1) the backward ring."""
+        m = re.search(r"source_target_pairs=\{(.*?)\}\}", instr.line)
+        if not m:
+            return True
+        pairs = re.findall(r"\{(\d+),(\d+)\}", m.group(0))
+        if not pairs:
+            return True
+        fwd = sum(1 for s, t in pairs
+                  if (int(s) + 1) % max(len(pairs), 1) == int(t) % max(len(pairs), 1))
+        return fwd * 2 >= len(pairs)
+
+    def _dot_flops(self, comp: Computation, instr: Instr) -> float:
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
+        cdims = [int(d) for d in m.group(1).split(",") if d] if m else []
+        # lhs operand shape
+        ops = re.findall(r"%([\w.\-]+)", instr.args)
+        k = 1
+        if ops:
+            lhs = comp.by_name(ops[0])
+            if lhs is not None:
+                parsed = _parse_dims(lhs.type_str)
+                if parsed:
+                    dims = parsed[0][1]
+                    for d in cdims:
+                        if d < len(dims):
+                            k *= dims[d]
+        return 2.0 * _type_numel(instr.type_str) * max(k, 1)
+
+    def _called(self, instr: Instr, attr: str) -> Optional[str]:
+        m = re.search(rf"{attr}=%?([\w.\-]+)", instr.line)
+        return m.group(1) if m else None
+
+    # ------------------------------------------------------------------
+    def comp_costs(self, name: str, fused: bool = False) -> Costs:
+        key = f"{name}|{fused}"
+        if key in self._memo:
+            return self._memo[key]
+        c = Costs()
+        comp = self.comps.get(name)
+        if comp is None:
+            return c
+        for i in comp.instrs:
+            c.add(self.instr_costs(comp, i, fused))
+        self._memo[key] = c
+        return c
+
+    def instr_costs(self, comp: Computation, i: Instr,
+                    fused: bool = False) -> Costs:
+        c = Costs()
+        op = i.op
+        if op in _FREE_OPS:
+            return c
+
+        if op == "while":
+            body = self._called(i, "body")
+            cond = self._called(i, "condition")
+            trips = self._trip_count(cond) if cond else 1
+            if body:
+                c.add(self.comp_costs(body), trips)
+            if cond:
+                c.add(self.comp_costs(cond), trips)
+            return c
+
+        if op == "fusion":
+            callee = self._called(i, "calls")
+            if callee:
+                inner = self.comp_costs(callee, fused=True)
+                c.flops += inner.flops
+                c.bytes += inner.bytes     # mem-ops inside the fusion
+                for k in COLLECTIVE_KINDS:
+                    c.coll[k] += inner.coll[k]
+            if self.mem_mode == "boundary":
+                c.bytes += self._io_bytes(comp, i)
+            return c
+
+        if op in ("call", "async-start", "custom-call"):
+            callee = self._called(i, "to") or self._called(i, "calls")
+            if callee:
+                c.add(self.comp_costs(callee))
+            c.bytes += 0 if fused else self._io_bytes(comp, i)
+            return c
+
+        if op == "conditional":
+            for attr in ("true_computation", "false_computation"):
+                callee = self._called(i, attr)
+                if callee:
+                    c.add(self.comp_costs(callee), 0.5)
+            m = re.findall(r"branch_computations=\{([^}]*)\}", i.line)
+            if m:
+                names = re.findall(r"%?([\w.\-]+)", m[0])
+                for n in names:
+                    c.add(self.comp_costs(n), 1.0 / max(len(names), 1))
+            c.bytes += 0 if fused else self._io_bytes(comp, i)
+            return c
+
+        base = op[:-len("-start")] if op.endswith("-start") else op
+        if base in COLLECTIVE_KINDS and not op.endswith("-done"):
+            b = self._operand_bytes(comp, i)
+            c.coll[base] += b
+            if base == "collective-permute":
+                c.coll["cp_fwd" if self._permute_fwd(i) else "cp_bwd"] += b
+
+        if op == "dot":
+            c.flops += self._dot_flops(comp, i)
+        elif op in _EW_FLOP_OPS:
+            c.flops += _type_numel(i.type_str)
+        elif op in ("reduce", "reduce-window"):
+            # ~1 flop per input element
+            c.flops += self._operand_numel(comp, i)
+        elif op == "convolution":
+            c.flops += 2 * _type_numel(i.type_str)  # lower bound
+
+        if op.endswith("-done"):
+            return c
+        if self.mem_mode == "fused":
+            if op in _MEM_OPS or (op.endswith("-start")
+                                  and op[:-6] in _MEM_OPS):
+                c.bytes += self._mem_bytes(comp, i)
+        elif not fused:
+            c.bytes += self._io_bytes(comp, i)
+        return c
+
+    # ------------------------------------------------------------------
+    def _operand_names(self, i: Instr) -> List[str]:
+        args = i.args.split("), ")[0] if ")," in i.args else i.args
+        return re.findall(r"%([\w.\-]+)", args)
+
+    def _operand_bytes(self, comp: Computation, i: Instr) -> int:
+        tot = 0
+        for n in self._operand_names(i):
+            d = comp.by_name(n)
+            if d is not None:
+                tot += _type_bytes(d.type_str)
+        return tot
+
+    def _operand_numel(self, comp: Computation, i: Instr) -> int:
+        tot = 0
+        for n in self._operand_names(i):
+            d = comp.by_name(n)
+            if d is not None:
+                tot += _type_numel(d.type_str)
+        return tot
+
+    def _io_bytes(self, comp: Computation, i: Instr) -> int:
+        return self._operand_bytes(comp, i) + _type_bytes(i.type_str)
+
+    def _mem_bytes(self, comp: Computation, i: Instr) -> int:
+        """HBM traffic of a mem-op with slice-aware semantics: a
+        dynamic-slice reads only the slice (not its source buffer); a
+        dynamic-update-slice writes only the updated region (in-place on
+        TPU); gather/scatter touch ~the transferred rows."""
+        op = i.op
+        if op in ("dynamic-slice", "gather", "pad", "reverse", "copy",
+                  "concatenate"):
+            return 2 * _type_bytes(i.type_str)
+        if op in ("dynamic-update-slice", "scatter"):
+            sizes = [_type_bytes(self.comps[comp.name].by_name(n).type_str)
+                     for n in self._operand_names(i)
+                     if comp.by_name(n) is not None]
+            return 2 * min(sizes) if sizes else 2 * _type_bytes(i.type_str)
+        return self._io_bytes(comp, i)
+
+    # ------------------------------------------------------------------
+    def entry_costs(self) -> Costs:
+        assert self.entry, "no ENTRY computation found"
+        c = Costs()
+        c.add(self.comp_costs(self.entry))
+        if self.mem_mode == "fused":
+            # entry params read once + root result written once
+            comp = self.comps[self.entry]
+            for i in comp.instrs:
+                if i.op == "parameter":
+                    c.bytes += _type_bytes(i.type_str)
+                if i.line.lstrip().startswith("ROOT"):
+                    c.bytes += _type_bytes(i.type_str)
+        return c
+
+
+def analyze(hlo_text: str) -> Dict[str, float]:
+    """Both memory accountings + flops + per-kind collective bytes."""
+    a = HLOAnalyzer(hlo_text, mem_mode="fused")
+    c = a.entry_costs()
+    upper = HLOAnalyzer(hlo_text, mem_mode="boundary").entry_costs()
+    out = {"flops": c.flops, "bytes": c.bytes, "bytes_upper": upper.bytes,
+           "collective_total": c.total_coll(),
+           "collective_wire": c.wire_time_bytes()}
+    out.update({f"coll_{k}": v for k, v in c.coll.items()})
+    return out

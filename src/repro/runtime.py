@@ -1,0 +1,43 @@
+"""Runtime (non-architecture) knobs: dtypes, parallelism mode, remat, CAIS.
+
+Separated from ArchConfig so the same architecture can be lowered with
+different distribution/precision strategies (baseline vs CAIS vs hillclimbed).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+
+@dataclass(frozen=True)
+class Runtime:
+    # numerics
+    compute_dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    # distribution
+    sequence_parallel: bool = True      # SP-TP layout (paper's primary)
+    tp_mode: str = "auto"               # auto | barrier | cais (core/primitives)
+    cais_chunks: int = 8                # ring chunks (merge-table analogue)
+    cais_bidirectional: bool = True     # asymmetric/bidirectional overlap
+    # memory
+    remat: bool = True                  # activation checkpointing per period
+    loss_chunk: int = 512               # CE computed in seq chunks (big vocabs)
+    # decode KV-cache placement: "context" shards the cache sequence dim over
+    # the TP axis (context parallelism); "batch_only" replicates it there
+    cache_layout: str = "context"
+    # optimizer distribution
+    zero_sharding: bool = True          # shard optimizer state over DP axes
+
+    @property
+    def dtype(self):
+        return DTYPES[self.compute_dtype]
+
+    @property
+    def pdtype(self):
+        return DTYPES[self.param_dtype]
+
+
+SMOKE = Runtime(compute_dtype="float32", remat=False, loss_chunk=64)

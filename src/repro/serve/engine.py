@@ -1,0 +1,110 @@
+"""Batched serving engine: continuous-batching-lite over prefill/decode steps.
+
+Requests enter a queue; the engine packs up to `max_batch` requests, runs one
+shared prefill (left-padded to the longest prompt via position masking), then
+steps decode for all active sequences, retiring finished ones and (greedy or
+temperature) sampling. All compute goes through the model's jit'd
+prefill/decode steps — the same ones the dry-run lowers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding
+from repro.configs.base import ArchConfig
+from repro.runtime import Runtime
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class ServeConfig:
+    max_batch: int = 8
+    s_max: int = 256
+
+
+class Engine:
+    def __init__(self, model, params, cfg: ArchConfig, rt: Runtime,
+                 serve_cfg: ServeConfig = ServeConfig(), mesh=None,
+                 extras: Optional[Dict[str, Any]] = None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.rt = rt
+        self.sc = serve_cfg
+        self.mesh = mesh
+        self.extras = extras or {}
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, s_max=serve_cfg.s_max))
+        self._decode = jax.jit(model.decode_step)
+
+    def _pack(self, requests: List[Request]):
+        """Right-align prompts into one (B, S) batch (pad token 0; padding
+        positions are masked out by per-request idx)."""
+        S = max(len(r.prompt) for r in requests)
+        B = len(requests)
+        toks = np.zeros((B, S), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, S - len(r.prompt):] = r.prompt   # left-pad
+            lens[i] = len(r.prompt)
+        return jnp.asarray(toks), jnp.asarray(lens), S
+
+    def run(self, requests: List[Request], key=None) -> List[Request]:
+        key = key if key is not None else jax.random.key(0)
+        # group by prompt length: one prefill per group keeps positions exact
+        # (no pad tokens leak into the KV cache)
+        by_len: Dict[int, List[Request]] = {}
+        for r in requests:
+            by_len.setdefault(len(r.prompt), []).append(r)
+        with sharding.use_mesh(self.mesh):
+            for _, group in sorted(by_len.items()):
+                for i in range(0, len(group), self.sc.max_batch):
+                    chunk = group[i:i + self.sc.max_batch]
+                    key, sub = jax.random.split(key)
+                    self._run_batch(chunk, sub)
+        return requests
+
+    def _run_batch(self, requests: List[Request], key):
+        toks, lens, S = self._pack(requests)
+        batch = {"tokens": toks, **self.extras}
+        logits, caches = self._prefill(self.params, batch)
+        prefix = self.cfg.num_prefix_tokens
+        idx = jnp.full((len(requests),), S + prefix, jnp.int32)
+        tok = self._sample(logits[:, -1], requests, key)
+
+        max_new = max(r.max_new_tokens for r in requests)
+        for t in range(max_new):
+            for i, r in enumerate(requests):
+                if not r.done and len(r.out_tokens) < r.max_new_tokens:
+                    r.out_tokens.append(int(tok[i, 0]))
+                    if len(r.out_tokens) >= r.max_new_tokens:
+                        r.done = True
+            if all(r.done for r in requests):
+                break
+            key, sub = jax.random.split(key)
+            logits, caches = self._decode(self.params, tok, caches, idx + t)
+            tok = self._sample(logits[:, -1], requests, sub)
+        for r in requests:
+            r.done = True
+
+    def _sample(self, logits, requests: List[Request], key):
+        greedy = jnp.argmax(logits, -1)
+        temp = jnp.asarray([max(r.temperature, 1e-6) for r in requests])
+        sampled = jax.random.categorical(key, logits / temp[:, None], -1)
+        use_greedy = jnp.asarray([r.temperature == 0.0 for r in requests])
+        out = jnp.where(use_greedy, greedy, sampled)
+        return out.astype(jnp.int32)[:, None]

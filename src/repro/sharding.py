@@ -1,0 +1,95 @@
+"""Mesh / sharding conventions for the whole framework.
+
+Axis naming (DESIGN.md §6):
+  * ``pod``   — cross-pod data parallelism (only on the multi-pod mesh)
+  * ``data``  — in-pod data parallelism (+ context parallelism for batch-1)
+  * ``model`` — tensor / sequence / expert parallelism (high-bandwidth ICI)
+
+Model code never touches a mesh directly: it calls :func:`shard` with a
+logical :class:`jax.sharding.PartitionSpec`. When no mesh is active (CPU smoke
+tests, single device) the call is a no-op, so the same model runs everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+POD_AXIS = "pod"
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+
+# Batch dims shard over every data-parallel axis present on the mesh.
+BATCH_AXES = (POD_AXIS, DATA_AXIS)
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def _filter_spec(mesh: Mesh, spec: P) -> P:
+    """Drop axis names that the active mesh does not have (e.g. ``pod`` on the
+    single-pod mesh) so one logical spec serves every mesh."""
+    names = set(mesh.axis_names)
+
+    def keep(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    return P(*(keep(e) for e in spec))
+
+
+def shard(x, *spec_entries):
+    """``with_sharding_constraint`` against the active mesh; no-op without one.
+
+    ``shard(x, ("pod","data"), None, "model")`` pins batch to the DP axes and
+    the last dim to the TP axis.
+    """
+    mesh = current_mesh()
+    if mesh is None or mesh.size == 1:
+        return x
+    spec = _filter_spec(mesh, P(*spec_entries))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, *spec_entries) -> NamedSharding:
+    return NamedSharding(mesh, _filter_spec(mesh, P(*spec_entries)))
+
+
+def batch_spec(mesh: Mesh, extra_dims: int = 1) -> NamedSharding:
+    """(batch, seq, ...) sharding: batch over DP axes, rest replicated."""
+    return named_sharding(mesh, BATCH_AXES, *([None] * extra_dims))
+
+
+def axis_size(mesh: Optional[Mesh], name: str) -> int:
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+def dp_size(mesh: Optional[Mesh]) -> int:
+    return axis_size(mesh, POD_AXIS) * axis_size(mesh, DATA_AXIS)
+
+
+def tp_size(mesh: Optional[Mesh]) -> int:
+    return axis_size(mesh, MODEL_AXIS)

@@ -1,0 +1,117 @@
+"""Trainer: the production step loop — checkpoint/restart, straggler
+watchdog, heartbeat, preemption handling, deterministic resume.
+
+Restart semantics: the data pipeline is keyed on (seed, step), so
+restore(step) + iterate(start_step=step) replays the exact stream; loss
+curves across a kill/restart are bitwise-continuable (tested in
+tests/test_substrate.py::test_checkpoint_restart_determinism).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro import sharding
+from repro.checkpoint import store
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.data.pipeline import DataConfig, make_batch
+from repro.ft.watchdog import Heartbeat, PreemptionGuard, StepWatchdog
+from repro.optim.optimizers import Optimizer
+from repro.runtime import Runtime
+from repro.train.step import init_state, make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    microbatches: int = 1
+    straggler_threshold: float = 2.5
+    heartbeat_path: Optional[str] = None
+
+
+@dataclass
+class Trainer:
+    model: Any
+    opt: Optimizer
+    arch: ArchConfig
+    shape: ShapeConfig
+    rt: Runtime = Runtime()
+    cfg: TrainerConfig = field(default_factory=TrainerConfig)
+    data: DataConfig = field(default_factory=DataConfig)
+    mesh: Any = None
+    # injectable for tests: step-time override to simulate stragglers
+    _clock: Callable[[], float] = time.monotonic
+
+    def __post_init__(self):
+        self.train_step = jax.jit(
+            make_train_step(self.model, self.opt, self.rt,
+                            self.cfg.microbatches))
+        self.watchdog = StepWatchdog(threshold=self.cfg.straggler_threshold)
+        self.history: List[Dict[str, float]] = []
+        self.events: List[str] = []
+
+    # ----- state -----
+    def fresh_state(self, seed: int = 0):
+        return init_state(self.model, self.opt, jax.random.key(seed))
+
+    def restore_or_init(self, seed: int = 0):
+        if self.cfg.ckpt_dir and store.latest_step(self.cfg.ckpt_dir) is not None:
+            template = jax.eval_shape(self.fresh_state, seed)
+            state, manifest = store.restore(self.cfg.ckpt_dir, template)
+            self.events.append(f"restored step {manifest['step']}")
+            return state
+        return self.fresh_state(seed)
+
+    # ----- loop -----
+    def run(self, state=None, seed: int = 0):
+        state = state if state is not None else self.restore_or_init(seed)
+        hb = None
+        if self.cfg.heartbeat_path:
+            hb = Heartbeat(self.cfg.heartbeat_path)
+            hb.start()
+        saver = store.AsyncSaver(self.cfg.ckpt_dir) if self.cfg.ckpt_dir \
+            else None
+        try:
+            with PreemptionGuard() as guard, \
+                    sharding.use_mesh(self.mesh):
+                start = int(state["step"])
+                for step in range(start, self.cfg.total_steps):
+                    t0 = self._clock()
+                    batch = make_batch(self.arch, self.shape, step, self.data)
+                    state, metrics = self.train_step(state, batch)
+                    loss = float(metrics["loss"])
+                    dt = self._clock() - t0
+
+                    if self.watchdog.observe(step, dt):
+                        self.events.append(f"straggler@{step}")
+                        # policy: checkpoint now so an orchestrator can
+                        # restart on healthy hosts without losing work
+                        if saver:
+                            saver.save(state, step + 1)
+                        self.watchdog.reset()
+
+                    self.history.append(
+                        {"step": step, "loss": loss, "dt": dt})
+                    if step % self.cfg.log_every == 0:
+                        print(f"step {step:6d} loss {loss:8.4f} "
+                              f"dt {dt*1e3:7.1f}ms")
+                    if saver and (step + 1) % self.cfg.ckpt_every == 0:
+                        saver.save(state, step + 1)
+                    if guard.requested:
+                        self.events.append(f"preempted@{step}")
+                        if saver:
+                            saver.save(state, step + 1)
+                        break
+        finally:
+            if saver:
+                saver.wait()
+            if hb:
+                hb.stop()
+        return state

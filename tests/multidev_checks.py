@@ -1,0 +1,309 @@
+"""Multi-device correctness checks, executed in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (so the main pytest
+process keeps a single device; see tests/test_multidevice.py).
+
+Prints one `CHECK <name> <maxerr>` line per assertion; exits non-zero on any
+failure.
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding
+from repro.configs import get_arch
+from repro.core import dataflow as df
+from repro.core import primitives as prim
+from repro.core.primitives import CAISConfig
+from repro.models import build_model
+from repro.runtime import Runtime
+
+FAILED = []
+
+
+def check(name, err, tol=1e-4):
+    print(f"CHECK {name} {err:.3e}")
+    if not (err <= tol):
+        FAILED.append((name, err))
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    ax = (jax.sharding.AxisType.Auto,)
+
+    # ---------------- primitives on TP rings of size 2 / 4 / 8 ------------
+    B, S, d, F = 2, 64, 32, 48
+    x = jax.random.normal(jax.random.key(0), (B, S, d), jnp.float32)
+    w = jax.random.normal(jax.random.key(1), (d, F), jnp.float32) * 0.1
+    ref = x @ w
+
+    for ring in (2, 4, 8):
+        rmesh = jax.make_mesh((8 // ring, ring), ("data", "model"),
+                              axis_types=ax * 2)
+        cais = CAISConfig(num_chunks=2, bidirectional=True)
+        y = jax.jit(jax.shard_map(
+            lambda xl, wl: prim.ag_gemm(xl, wl, "model", cais),
+            mesh=rmesh, in_specs=(P(None, "model", None), P(None, "model")),
+            out_specs=P(None, None, "model"), check_vma=False))(x, w)
+        check(f"ag_gemm.ring{ring}", float(jnp.abs(y - ref).max()))
+        y2 = jax.jit(jax.shard_map(
+            lambda xl, wl: prim.gemm_rs(xl, wl, "model", cais),
+            mesh=rmesh, in_specs=(P(None, None, "model"), P("model", None)),
+            out_specs=P(None, "model", None), check_vma=False))(x, w)
+        check(f"gemm_rs.ring{ring}", float(jnp.abs(y2 - ref).max()))
+
+    mesh = jax.make_mesh((8,), ("model",), axis_types=ax)
+    for chunks in (1, 2, 4):
+        for bidir in (False, True):
+            cais = CAISConfig(num_chunks=chunks, bidirectional=bidir)
+            y = jax.jit(jax.shard_map(
+                lambda xl, wl: prim.ag_gemm(xl, wl, "model", cais),
+                mesh=mesh, in_specs=(P(None, "model", None), P(None, "model")),
+                out_specs=P(None, None, "model"), check_vma=False))(x, w)
+            check(f"ag_gemm.c{chunks}.b{int(bidir)}",
+                  float(jnp.abs(y - ref).max()))
+            y2 = jax.jit(jax.shard_map(
+                lambda xl, wl: prim.gemm_rs(xl, wl, "model", cais),
+                mesh=mesh, in_specs=(P(None, None, "model"), P("model", None)),
+                out_specs=P(None, "model", None), check_vma=False))(x, w)
+            check(f"gemm_rs.c{chunks}.b{int(bidir)}",
+                  float(jnp.abs(y2 - ref).max()))
+
+    cais = CAISConfig(num_chunks=2)
+    y3 = jax.jit(jax.shard_map(
+        lambda xl, wl: prim.gemm_ar(xl, wl, "model", cais),
+        mesh=mesh, in_specs=(P(None, None, "model"), P("model", None)),
+        out_specs=P(None, None, None), check_vma=False))(x, w)
+    check("gemm_ar", float(jnp.abs(y3 - ref).max()))
+
+    x2 = jax.random.normal(jax.random.key(2), (B, S, d))
+    w2 = jax.random.normal(jax.random.key(3), (d, F)) * 0.1
+    o1, o2 = jax.jit(jax.shard_map(
+        lambda a, b, c, e: prim.overlap_asymmetric((a, b), (c, e), "model",
+                                                   cais),
+        mesh=mesh,
+        in_specs=(P(None, None, "model"), P("model", None),
+                  P(None, "model", None), P(None, "model")),
+        out_specs=(P(None, "model", None), P(None, None, "model")),
+        check_vma=False))(x, w, x2, w2)
+    check("overlap_asym.rs", float(jnp.abs(o1 - ref).max()))
+    check("overlap_asym.ag", float(jnp.abs(o2 - x2 @ w2).max()))
+
+    # ---------------- dataflow optimizer ----------------
+    g = df.sublayer_graph()
+    opt = df.optimize(g)
+    assert [n.op for n in opt.nodes if n.op != "input"] == ["fused_rs_ln_ag"]
+    w1 = jax.random.normal(jax.random.key(4), (d, F)) * 0.1
+    scale = jax.random.normal(jax.random.key(5), (F,)) * 0.1
+    wu = jax.random.normal(jax.random.key(6), (F, d)) * 0.1
+    refdf = df.execute(g, {"x": x}, {"w1": w1, "scale": scale, "w2": wu})[0]
+
+    def run_graph(graph):
+        def local(x, w1, scale, w2):
+            return df.execute(graph, {"x": x},
+                              {"w1": w1, "scale": scale, "w2": w2},
+                              axis="model", cais=cais)
+        return jax.jit(jax.shard_map(
+            local, mesh=mesh,
+            in_specs=(P(None, None, "model"), P("model", None), P(),
+                      P(None, "model")),
+            out_specs=(P(None, None, "model"),), check_vma=False))(
+                x, w1, scale, wu)[0]
+
+    check("dataflow.unopt", float(jnp.abs(run_graph(g) - refdf).max()), 1e-3)
+    check("dataflow.opt", float(jnp.abs(run_graph(opt) - refdf).max()), 1e-3)
+
+    # ---------------- full model: auto == barrier == cais ----------------
+    mesh2 = jax.make_mesh((2, 4), ("data", "model"), axis_types=ax * 2)
+    cfg = get_arch("deepseek-7b").smoke().scaled(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+        d_ff=128)
+    tokens = jax.random.randint(jax.random.key(7), (4, 32), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    key = jax.random.key(0)
+    losses = {}
+    for mode in ("auto", "barrier", "cais"):
+        rt = Runtime(compute_dtype="float32", remat=(mode == "cais"),
+                     tp_mode=mode, loss_chunk=16, cais_chunks=2)
+        model = build_model(cfg, rt)
+        params = model.init(key)
+        with sharding.use_mesh(mesh2):
+            losses[mode] = float(jax.jit(model.loss)(params, batch))
+    check("model.auto_vs_barrier", abs(losses["auto"] - losses["barrier"]))
+    check("model.auto_vs_cais", abs(losses["auto"] - losses["cais"]))
+
+    # cais grads finite under remat
+    rt = Runtime(compute_dtype="float32", remat=True, tp_mode="cais",
+                 loss_chunk=16, cais_chunks=2)
+    model = build_model(cfg, rt)
+    params = model.init(key)
+    with sharding.use_mesh(mesh2):
+        loss, grads = jax.jit(jax.value_and_grad(model.loss))(params, batch)
+    ok = all(np.all(np.isfinite(np.asarray(g, np.float32)))
+             for g in jax.tree.leaves(grads))
+    check("model.cais_grads_finite", 0.0 if ok else 1.0)
+
+    # HLO structure: cais mode must contain collective-permutes and no
+    # all-gather on the FFN path; barrier mode must contain all-gathers.
+    def hlo_for(mode):
+        rt = Runtime(compute_dtype="float32", remat=False, tp_mode=mode,
+                     loss_chunk=16, cais_chunks=2)
+        model = build_model(cfg, rt)
+        params = model.init(key)
+        with sharding.use_mesh(mesh2):
+            return jax.jit(model.loss).lower(params, batch).compile().as_text()
+
+    cais_hlo = hlo_for("cais")
+    barrier_hlo = hlo_for("barrier")
+    check("hlo.cais_has_permute",
+          0.0 if "collective-permute" in cais_hlo else 1.0)
+    check("hlo.barrier_has_allgather",
+          0.0 if "all-gather" in barrier_hlo else 1.0)
+
+    # ---------------- CAIS expert all-to-all (EP) --------------------------
+    n, C, d, F = 8, 16, 32, 48
+    send8 = jax.random.normal(jax.random.key(9), (8, n, C, d))
+    wu8 = jax.random.normal(jax.random.key(10), (8, d, F)) * 0.1
+    wd8 = jax.random.normal(jax.random.key(12), (8, F, d)) * 0.1
+
+    def a2a(kind, bidir=True):
+        def local(send, wu, wd):
+            s, u, w = send[0], wu[0], wd[0]
+            ffn = lambda t: jax.nn.gelu(t @ u) @ w
+            if kind == "barrier":
+                return prim.barrier_a2a_expert_ffn(s, ffn, "model")[None]
+            return prim.a2a_expert_ffn(
+                s, ffn, "model", CAISConfig(bidirectional=bidir))[None]
+        return jax.jit(jax.shard_map(
+            local, mesh=mesh, in_specs=(P("model"), P("model"), P("model")),
+            out_specs=P("model"), check_vma=False))(send8, wu8, wd8)
+
+    ref_a2a = a2a("barrier")
+    check("a2a_expert.cais", float(jnp.abs(a2a("cais") - ref_a2a).max()),
+          1e-5)
+    check("a2a_expert.cais_uni",
+          float(jnp.abs(a2a("cais", bidir=False) - ref_a2a).max()), 1e-5)
+
+    # MoE model: CE identical across modes (aux estimator partitioning
+    # differs by design — isolate it)
+    import dataclasses
+
+    import repro.models.transformer as tr
+    aux_w = tr.AUX_LOSS_WEIGHT
+    tr.AUX_LOSS_WEIGHT = 0.0
+    try:
+        cfg_moe = get_arch("mixtral-8x7b").smoke().scaled(
+            num_layers=2, d_model=64, num_heads=8, num_kv_heads=8,
+            head_dim=16, d_ff=64, window=16)
+        cfg_moe = cfg_moe.scaled(moe=dataclasses.replace(
+            cfg_moe.moe, capacity_factor=8.0, group_size=1024))
+        toks = jax.random.randint(jax.random.key(13), (2, 32), 0,
+                                  cfg_moe.vocab_size)
+        bmoe = {"tokens": toks, "labels": toks}
+        ls = {}
+        for mode in ("auto", "cais"):
+            rt = Runtime(compute_dtype="float32", remat=False, tp_mode=mode,
+                         loss_chunk=16, cais_chunks=2)
+            mm = build_model(cfg_moe, rt)
+            pp = mm.init(jax.random.key(0))
+            with sharding.use_mesh(mesh2):
+                ls[mode] = float(jax.jit(mm.loss)(pp, bmoe))
+        check("moe.auto_vs_cais_ce", abs(ls["auto"] - ls["cais"]), 2e-5)
+    finally:
+        tr.AUX_LOSS_WEIGHT = aux_w
+
+    # ---------------- elastic resharding across meshes --------------------
+    # Train 2 steps on a (2,4) mesh, checkpoint, restore onto (4,2) and
+    # continue — losses must continue exactly (deliverable: elastic scaling).
+    import tempfile
+
+    from repro.checkpoint import store as ckpt_store
+    from repro.configs.base import ShapeConfig
+    from repro.data.pipeline import make_batch
+    from repro.launch import specs as SP
+    from repro.optim import constant_schedule, make_optimizer
+    from repro.train.step import init_state, make_train_step
+
+    cfg_e = get_arch("internlm2-1.8b").smoke()
+    rt_e = Runtime(compute_dtype="float32", remat=False, loss_chunk=16)
+    model_e = build_model(cfg_e, rt_e)
+    opt_e = make_optimizer("adamw", constant_schedule(1e-3))
+    step_e = jax.jit(make_train_step(model_e, opt_e, rt_e))
+    shp = ShapeConfig("t", 16, 4, "train")
+
+    def run_steps(state, mesh_, a, b):
+        with sharding.use_mesh(mesh_):
+            for s in range(a, b):
+                state, met = step_e(state, make_batch(cfg_e, shp, s))
+        return state, float(met["loss"])
+
+    mesh_a = jax.make_mesh((2, 4), ("data", "model"), axis_types=ax * 2)
+    mesh_b = jax.make_mesh((4, 2), ("data", "model"), axis_types=ax * 2)
+
+    st = init_state(model_e, opt_e, jax.random.key(0))
+    st_ref = jax.tree.map(jnp.copy, st)
+    # reference: 4 steps without interruption (no mesh)
+    st_ref, loss_ref = run_steps(st_ref, None, 0, 4)
+
+    st, _ = run_steps(st, mesh_a, 0, 2)
+    with tempfile.TemporaryDirectory() as td:
+        ckpt_store.save(td, st, step=2)
+        template = jax.eval_shape(lambda: st)
+        shapes = jax.eval_shape(lambda: st)
+        sh_b = SP.state_shardings(cfg_e, mesh_b, shapes, rt_e)
+        restored, _ = ckpt_store.restore(td, template)
+        restored = jax.device_put(restored, sh_b)
+    st2, loss2 = run_steps(restored, mesh_b, 2, 4)
+    check("elastic.loss_continuity", abs(loss2 - loss_ref), 1e-4)
+
+    # ---------------- int8 gradient compression (error feedback) ----------
+    from repro.optim.compression import compressed_psum, init_error_feedback
+
+    mesh_dp = jax.make_mesh((8,), ("data",), axis_types=ax)
+    gkey = jax.random.key(11)
+    local_grads = jax.random.normal(gkey, (8, 64)) * jnp.linspace(
+        0.1, 3.0, 8)[:, None]   # heterogeneous per-device grads
+    exact_mean = jnp.mean(local_grads, axis=0)
+
+    def dp_reduce(g, ef):
+        return compressed_psum({"g": g}, {"g": ef}, axes=("data",))
+
+    ef0 = jnp.zeros((1, 64))
+
+    red, ef = jax.jit(jax.shard_map(
+        dp_reduce, mesh=mesh_dp,
+        in_specs=(P("data", None), P("data", None)),
+        out_specs=(P("data", None), P("data", None)),
+        check_vma=False))(local_grads, jnp.zeros_like(local_grads))
+    # every replica holds the same reduced value, ≈ exact mean within int8
+    approx = red["g"][0]
+    rel = float(jnp.abs(approx - exact_mean).max()
+                / (jnp.abs(exact_mean).max() + 1e-9))
+    check("compression.int8_close", rel, 0.05)
+
+    # error feedback: repeated reduction of a CONSTANT gradient with EF must
+    # average to the exact value (bias decays)
+    acc = jnp.zeros((64,))
+    ef_state = jnp.zeros_like(local_grads)
+    for _ in range(16):
+        red, new_ef = jax.jit(jax.shard_map(
+            dp_reduce, mesh=mesh_dp,
+            in_specs=(P("data", None), P("data", None)),
+            out_specs=(P("data", None), P("data", None)),
+            check_vma=False))(local_grads, ef_state)
+        ef_state = new_ef["g"]
+        acc = acc + red["g"][0]
+    rel_ef = float(jnp.abs(acc / 16 - exact_mean).max()
+                   / (jnp.abs(exact_mean).max() + 1e-9))
+    check("compression.error_feedback_unbiased", rel_ef, 0.01)
+
+    if FAILED:
+        print("FAILED:", FAILED)
+        sys.exit(1)
+    print("ALL OK")
+
+
+if __name__ == "__main__":
+    main()
