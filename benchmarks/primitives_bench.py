@@ -18,17 +18,18 @@ def _child() -> None:
     from jax.sharding import PartitionSpec as P
 
     from benchmarks.common import emit, time_fn
+    from repro import sharding
     from repro.core import primitives as prim
+    from repro.core.backends import CAISBackend, get_backend
     from repro.core.primitives import CAISConfig
 
-    ax = (jax.sharding.AxisType.Auto,)
-    mesh = jax.make_mesh((8,), ("model",), axis_types=ax)
+    mesh = sharding.make_mesh((8,), ("model",))
     B, S, d, F = 4, 2048, 512, 512
     x = jax.random.normal(jax.random.key(0), (B, S, d), jnp.bfloat16)
     w = jax.random.normal(jax.random.key(1), (d, F), jnp.bfloat16)
 
     def census(fn, in_specs, out_specs, *args):
-        txt = jax.jit(jax.shard_map(
+        txt = jax.jit(sharding.shard_map(
             fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             check_vma=False)).lower(*args).compile().as_text()
         return {k: len(re.findall(rf"= \S+ {k}\(", txt))
@@ -55,13 +56,34 @@ def _child() -> None:
          (x, w)),
     ]
     for name, fn, ins, outs, args in cases:
-        jitted = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=ins,
+        jitted = jax.jit(sharding.shard_map(fn, mesh=mesh, in_specs=ins,
                                        out_specs=outs, check_vma=False))
         us = time_fn(jitted, *args)
         c = census(fn, ins, outs, *args)
         emit(f"prim.{name}", us,
              f"hlo:ag={c['all-gather']} rs={c['reduce-scatter']} "
              f"ar={c['all-reduce']} cp={c['collective-permute']}")
+
+    # ---- compute-aware chunk planning: planned vs fixed chunking ---------
+    # The cais backend picks num_chunks per collective from payload bytes
+    # and ring size (coordination.plan); compare against static chunkings.
+    be = get_backend("cais")
+    payload = x.size * x.dtype.itemsize   # gathered global activation bytes
+    planned_c = CAISBackend.plan_chunks(payload, ring=8)
+    ag_specs = ((P(None, "model", None), P(None, "model")),
+                P(None, None, "model"))
+    for name, cfg_c in (("planned", CAISConfig(num_chunks=None)),
+                        ("fixed2", CAISConfig(num_chunks=2)),
+                        ("fixed4", CAISConfig(num_chunks=4)),
+                        ("fixed16", CAISConfig(num_chunks=16))):
+        fn = lambda a, b, c_=cfg_c: be.ag_gemm(a, b, "model", c_)
+        jitted = jax.jit(sharding.shard_map(
+            fn, mesh=mesh, in_specs=ag_specs[0], out_specs=ag_specs[1],
+            check_vma=False))
+        us = time_fn(jitted, x, w)
+        extra = f"num_chunks={planned_c} (auto)" if name == "planned" \
+            else f"num_chunks={cfg_c.num_chunks}"
+        emit(f"prim.ag_gemm.chunks.{name}", us, extra)
 
 
 def run() -> None:

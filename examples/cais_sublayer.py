@@ -22,6 +22,7 @@ def child():
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
 
+    from repro import sharding
     from repro.core import dataflow as df
     from repro.core.primitives import CAISConfig
 
@@ -31,8 +32,7 @@ def child():
     print("optimized: ", " -> ".join(n.op for n in opt.nodes
                                      if n.op != "input"))
 
-    mesh = jax.make_mesh((8,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = sharding.make_mesh((8,), ("model",))
     B, S, d, F = 2, 256, 128, 256
     ks = jax.random.split(jax.random.key(0), 4)
     x = jax.random.normal(ks[0], (B, S, d))
@@ -46,7 +46,7 @@ def child():
                               {"w1": w1, "scale": scale, "w2": w2},
                               axis="model",
                               cais=CAISConfig(num_chunks=chunks))
-        return jax.jit(jax.shard_map(
+        return jax.jit(sharding.shard_map(
             local, mesh=mesh,
             in_specs=(P(None, None, "model"), P("model", None), P(),
                       P(None, "model")),

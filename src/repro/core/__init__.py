@@ -1,6 +1,14 @@
 """CAIS-on-TPU core: compute-aware collective-fused TP schedules (the
-paper's primary contribution), the chunk-coordination scheduler, the
-graph-level dataflow optimizer, and the calibrated fabric model."""
+paper's primary contribution), the registry-dispatched CollectiveBackend
+API, the chunk-coordination scheduler, the graph-level dataflow optimizer,
+and the calibrated fabric model."""
+from repro.core.backends import (
+    CollectiveBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+    unregister_backend,
+)
 from repro.core.primitives import (
     CAISConfig,
     ag_gemm,
@@ -16,7 +24,9 @@ from repro.core.primitives import (
 )
 
 __all__ = [
-    "CAISConfig", "ag_gemm", "ag_gemm_multi", "barrier_ag_gemm",
-    "barrier_gemm_ar", "barrier_gemm_rs", "fused_rs_ln_ag", "gemm_ar",
-    "gemm_rs", "overlap_asymmetric", "ring_all_gather",
+    "CAISConfig", "CollectiveBackend", "ag_gemm", "ag_gemm_multi",
+    "available_backends", "barrier_ag_gemm", "barrier_gemm_ar",
+    "barrier_gemm_rs", "fused_rs_ln_ag", "gemm_ar", "gemm_rs", "get_backend",
+    "overlap_asymmetric", "register_backend", "ring_all_gather",
+    "unregister_backend",
 ]

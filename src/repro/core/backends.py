@@ -1,0 +1,284 @@
+"""CollectiveBackend: the registry-dispatched TP execution API.
+
+Every tensor-parallel collective-fused schedule the model path can run —
+AG→GEMM, GEMM→RS, GEMM→AR, the expert all-to-all, the fused RS+LN+AG
+sub-layer chain, and the asymmetric dual-stream overlap — is reached through
+one seam: a :class:`CollectiveBackend` instance looked up by name in a
+process-global registry. ``repro.core.tp`` and ``repro.core.dataflow.execute``
+dispatch through the backend instead of branching on mode strings, so adding
+a new communication strategy is *one registration*, not an edit of every
+sub-layer.
+
+Built-in backends
+-----------------
+``barrier``
+    The NVLS-style communication-centric baseline: one monolithic collective
+    HLO op (all-gather / reduce-scatter / all-to-all) around each GEMM.
+``cais``
+    The paper's compute-aware decomposed schedules
+    (:mod:`repro.core.primitives`): ring ``collective_permute`` chains
+    interleaved with partial GEMMs. When ``CAISConfig.num_chunks`` is None
+    the backend is *compute-aware in the paper's §III-B sense*: it picks the
+    chunking per collective from the payload bytes and ring size via
+    :func:`repro.core.coordination.plan` (cached per shape); an explicit
+    integer in the config is honored as a static override.
+``auto``
+    Reference backend that defers scheduling to XLA. Its methods are the
+    plain monolithic formulations (identical math to ``barrier``), and it
+    reports ``explicit = False``: the model path skips ``shard_map`` entirely
+    and lets the compiler place collectives from sharding constraints.
+
+Registration API
+----------------
+::
+
+    from repro.core.backends import CollectiveBackend, register_backend
+
+    class MyBackend(CollectiveBackend):
+        name = "mine"
+        def ag_gemm_multi(self, x, ws, axis, cais): ...
+        ...
+
+    register_backend(MyBackend())          # now Runtime(tp_mode="mine") works
+    get_backend("mine")                    # -> the instance
+    available_backends()                   # -> ["auto", "barrier", "cais", "mine"]
+
+All methods run INSIDE ``shard_map`` (they may use ``lax.axis_index`` /
+``lax.ppermute``); ``repro.core.tp`` owns the pjit-callable wrapping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import coordination
+from repro.core import primitives as prim
+from repro.core.primitives import CAISConfig
+
+
+class CollectiveBackend:
+    """Protocol for TP collective-fused execution strategies.
+
+    Subclasses implement the seven schedule methods below; ``name`` is the
+    registry key and ``explicit`` says whether the model path should enter
+    ``shard_map`` for this backend (False = XLA-scheduled reference).
+    Method contracts match :mod:`repro.core.primitives` (same shapes and
+    layouts; see the module docstring there).
+    """
+
+    name: str = "abstract"
+    explicit: bool = True
+
+    # -- AG-aligned -------------------------------------------------------
+    def ag_gemm(self, x, w, axis: str, cais: CAISConfig) -> jnp.ndarray:
+        """(B, S_loc, d) seq-sharded x; (d, F_loc) w -> (B, S, F_loc)."""
+        return self.ag_gemm_multi(x, (w,), axis, cais)[0]
+
+    def ag_gemm_multi(self, x, ws: Sequence, axis: str,
+                      cais: CAISConfig) -> Tuple[jnp.ndarray, ...]:
+        """One gather shared by several column-sharded weights (QKV, up+gate)."""
+        raise NotImplementedError
+
+    # -- RS/AR-aligned ----------------------------------------------------
+    def gemm_rs(self, x, w, axis: str, cais: CAISConfig) -> jnp.ndarray:
+        """(B, S, d_loc) feat-sharded x; (d_loc, F) w -> (B, S_loc, F)."""
+        raise NotImplementedError
+
+    def gemm_ar(self, x, w, axis: str, cais: CAISConfig) -> jnp.ndarray:
+        """(B, S, d_loc) feat-sharded x; (d_loc, F) w -> (B, S, F) reduced."""
+        raise NotImplementedError
+
+    # -- EP ---------------------------------------------------------------
+    def a2a_expert_ffn(self, send, ffn: Callable, axis: str,
+                       cais: CAISConfig) -> jnp.ndarray:
+        """(n, C, d) routed chunks -> (n, C, d) expert outputs (see prim)."""
+        raise NotImplementedError
+
+    # -- fused sub-layer chain -------------------------------------------
+    def fused_rs_ln_ag(self, x, w1, ln_scale, w2, axis: str, cais: CAISConfig,
+                       norm: str = "rmsnorm", residual=None):
+        """GEMM-RS -> (+res) -> LN -> AG-GEMM. Returns (out, z)."""
+        raise NotImplementedError
+
+    # -- asymmetric dual-stream overlap ----------------------------------
+    def overlap_asymmetric(self, rs_args, ag_args, axis: str,
+                           cais: CAISConfig):
+        """Independent GEMM-RS + AG-GEMM pair. Returns (rs_out, ag_out)."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# barrier — monolithic NVLS-style collectives around each GEMM
+# ---------------------------------------------------------------------------
+
+
+class BarrierBackend(CollectiveBackend):
+    """Communication-centric baseline: opaque collective phases."""
+
+    name = "barrier"
+
+    def ag_gemm_multi(self, x, ws, axis, cais):
+        xg = lax.all_gather(x, axis, axis=1, tiled=True)
+        return tuple(xg @ w for w in ws)
+
+    def gemm_rs(self, x, w, axis, cais):
+        return prim.barrier_gemm_rs(x, w, axis)
+
+    def gemm_ar(self, x, w, axis, cais):
+        return prim.barrier_gemm_ar(x, w, axis)
+
+    def a2a_expert_ffn(self, send, ffn, axis, cais):
+        return prim.barrier_a2a_expert_ffn(send, ffn, axis)
+
+    def fused_rs_ln_ag(self, x, w1, ln_scale, w2, axis, cais,
+                       norm="rmsnorm", residual=None):
+        from repro.models.layers import apply_norm
+
+        z = prim.barrier_gemm_rs(x, w1, axis)
+        if residual is not None:
+            z = z + residual
+        zn = apply_norm(norm, {"scale": ln_scale}, z)
+        return prim.barrier_ag_gemm(zn, w2, axis), z
+
+    def overlap_asymmetric(self, rs_args, ag_args, axis, cais):
+        x_rs, w_rs = rs_args
+        x_ag, w_ag = ag_args
+        return (prim.barrier_gemm_rs(x_rs, w_rs, axis),
+                prim.barrier_ag_gemm(x_ag, w_ag, axis))
+
+
+# ---------------------------------------------------------------------------
+# cais — decomposed ring schedules with compute-aware chunk planning
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=512)
+def _planned_chunks(payload_bytes: int, ring: int, bidirectional: bool) -> int:
+    """coordination.plan() keyed per (payload, ring) — shapes are static under
+    jit so the cache collapses repeated traces to one planner call."""
+    return coordination.plan(float(payload_bytes), ring,
+                             bidirectional=bidirectional).num_chunks
+
+
+class CAISBackend(CollectiveBackend):
+    """The paper's technique: permute chains interleaved with partial GEMMs,
+    chunked per-collective by the coordination planner unless the caller
+    pins ``CAISConfig.num_chunks``."""
+
+    name = "cais"
+
+    @staticmethod
+    def plan_chunks(payload_bytes: float, ring: int,
+                    bidirectional: bool = True) -> int:
+        """The chunking the backend would auto-pick for this collective."""
+        return _planned_chunks(int(payload_bytes), ring, bidirectional)
+
+    def _ring(self, axis: str, cais: CAISConfig) -> int:
+        return cais.interpret_n or prim._axis_size(axis)
+
+    def _resolve(self, cais: CAISConfig, gathered_bytes: float,
+                 ring: int) -> CAISConfig:
+        """Fill in num_chunks from the α-β plan when the config leaves it
+        open. ``gathered_bytes`` is the full (global) payload the collective
+        moves around the ring."""
+        if cais.num_chunks is not None or ring <= 1:
+            return cais
+        c = _planned_chunks(int(gathered_bytes), ring, cais.bidirectional)
+        return dataclasses.replace(cais, num_chunks=c)
+
+    @staticmethod
+    def _nbytes(x) -> int:
+        return int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+
+    def ag_gemm_multi(self, x, ws, axis, cais):
+        n = self._ring(axis, cais)
+        cais = self._resolve(cais, self._nbytes(x) * n, n)
+        return prim.ag_gemm_multi(x, tuple(ws), axis, cais)
+
+    def gemm_rs(self, x, w, axis, cais):
+        return prim.gemm_rs(x, w, axis, cais)
+
+    def gemm_ar(self, x, w, axis, cais):
+        return prim.gemm_ar(x, w, axis, cais)
+
+    def a2a_expert_ffn(self, send, ffn, axis, cais):
+        return prim.a2a_expert_ffn(send, ffn, axis, cais)
+
+    def fused_rs_ln_ag(self, x, w1, ln_scale, w2, axis, cais,
+                       norm="rmsnorm", residual=None):
+        # plan for the AG leg: the gathered z payload is (B, S, d) where
+        # S = x.shape[1] (x is full-sequence, feature-sharded) and d = w1 cols
+        n = self._ring(axis, cais)
+        itemsize = np.dtype(x.dtype).itemsize
+        z_bytes = int(x.shape[0]) * int(x.shape[1]) * int(w1.shape[1]) * \
+            itemsize
+        cais = self._resolve(cais, z_bytes, n)
+        return prim.fused_rs_ln_ag(x, w1, ln_scale, w2, axis, cais,
+                                   norm=norm, residual=residual)
+
+    def overlap_asymmetric(self, rs_args, ag_args, axis, cais):
+        # no _resolve: the lockstep schedule moves one S_loc slice per hop
+        # on each stream — its chunking is structural, not planner-chosen
+        return prim.overlap_asymmetric(rs_args, ag_args, axis, cais)
+
+
+# ---------------------------------------------------------------------------
+# auto — XLA-scheduled reference
+# ---------------------------------------------------------------------------
+
+
+class AutoBackend(BarrierBackend):
+    """Defer scheduling to the compiler. ``explicit = False`` tells the model
+    path to skip shard_map and express TP purely via sharding constraints
+    (the strong compiler baseline); the inherited monolithic methods remain
+    available so graphs can still be executed under this backend."""
+
+    name = "auto"
+    explicit = False
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, CollectiveBackend] = {}
+
+
+def register_backend(backend: CollectiveBackend,
+                     name: Optional[str] = None) -> CollectiveBackend:
+    """Register (or replace) a backend under ``name or backend.name``."""
+    key = name or backend.name
+    if not key or key == "abstract":
+        raise ValueError("backend must carry a concrete name")
+    _REGISTRY[key] = backend
+    return backend
+
+
+def unregister_backend(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def get_backend(name: Union[str, CollectiveBackend]) -> CollectiveBackend:
+    """Resolve a backend by name (instances pass through unchanged)."""
+    if isinstance(name, CollectiveBackend):
+        return name
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown collective backend {name!r}; available: "
+            f"{available_backends()}") from None
+
+
+def available_backends() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+register_backend(BarrierBackend())
+register_backend(CAISBackend())
+register_backend(AutoBackend())

@@ -9,10 +9,15 @@ A small dataflow IR over TP sub-layer chains plus a fusion pass that:
      ``fused_rs_ln_ag`` pipeline (deep kernel fusion, Fig. 9);
   3. pairs *independent* ``gemm_rs`` / ``ag_gemm`` nodes into an
      ``overlap_asym`` dual-stream op with complementary link directions
-     (asymmetric kernel overlapping, Fig. 9e/10).
+     (asymmetric kernel overlapping, Fig. 9e/10);
+  4. merges an ``allgather`` feeding several ``gemm_col`` nodes into one
+     ``ag_gemm_multi`` (QKV / gate+up share a single ring circulation).
 
 The executor runs a graph either as pure math (no mesh; reference) or inside
-``shard_map`` (explicit TP). Tensor layout conventions per value:
+``shard_map`` (explicit TP), dispatching every fused collective op through a
+:class:`repro.core.backends.CollectiveBackend` — the model sub-layers
+(``repro.core.tp.sp_ffn`` / ``sp_attention``) are built, optimized, and run
+through this IR. Tensor layout conventions per value:
 ``seq`` (B, S_loc, d) sequence-sharded · ``feat`` (B, S, d_loc)
 feature-sharded · ``full`` (B, S, d) replicated.
 """
@@ -25,7 +30,6 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import primitives as prim
 from repro.core.primitives import CAISConfig
 
 # ---------------------------------------------------------------------------
@@ -41,8 +45,12 @@ from repro.core.primitives import CAISConfig
 # allreduce            (x: partial-full)     —               full
 # layernorm            (x: any)              scale (d,)      same
 # add                  (a, b) same layout    —               same
+# custom               (any...)              —               fn-defined
+#   `fn` applies arbitrary *local* math (activation, attention core) — it
+#   never touches the mesh, so fusion passes may move collectives around it
 # --- fused (produced by optimize) ---
 # ag_gemm              (x: seq)              w               feat
+# ag_gemm_multi        (x: seq)              (w...)          feat per weight
 # gemm_rs              (x: feat)             w               seq
 # gemm_ar              (x: feat)             w               full
 # fused_rs_ln_ag       (x: feat[, res:seq])  (w1, scale, w2) feat (+ seq z)
@@ -50,8 +58,9 @@ from repro.core.primitives import CAISConfig
 
 VALID_OPS = {
     "input", "gemm_col", "gemm_row", "allgather", "reduce_scatter",
-    "allreduce", "layernorm", "add",
-    "ag_gemm", "gemm_rs", "gemm_ar", "fused_rs_ln_ag", "overlap_asym",
+    "allreduce", "layernorm", "add", "custom",
+    "ag_gemm", "ag_gemm_multi", "gemm_rs", "gemm_ar", "fused_rs_ln_ag",
+    "overlap_asym",
 }
 
 
@@ -62,6 +71,7 @@ class Node:
     inputs: Tuple[str, ...] = ()
     weights: Tuple[str, ...] = ()   # keys into the weights dict
     outputs: Tuple[str, ...] = ()   # multi-output fused ops; default (name,)
+    fn: Optional[Callable] = None   # local math for op == "custom"
 
     def __post_init__(self):
         assert self.op in VALID_OPS, self.op
@@ -84,12 +94,13 @@ class Graph:
         return [n for n in self.nodes if value in n.inputs]
 
     def reaches(self, src: str, dst: str) -> bool:
-        """Is there a dependency path from node `src` to node `dst`?"""
+        """Is there a dependency path from node `src` to node `dst`?
+        O(V+E) per query: one adjacency build, one traversal."""
         by_name = {n.name: n for n in self.nodes}
-        prod = {}
+        consumers_of: Dict[str, List[str]] = {}
         for n in self.nodes:
-            for o in n.outputs:
-                prod[o] = n.name
+            for v in n.inputs:
+                consumers_of.setdefault(v, []).append(n.name)
         seen, stack = set(), [src]
         while stack:
             cur = stack.pop()
@@ -98,9 +109,8 @@ class Graph:
             if cur in seen:
                 continue
             seen.add(cur)
-            for n in self.nodes:
-                if any(v in by_name[cur].outputs for v in n.inputs):
-                    stack.append(n.name)
+            for v in by_name[cur].outputs:
+                stack.extend(consumers_of.get(v, ()))
         return False
 
 
@@ -149,6 +159,28 @@ def fuse_compute_aware(g: Graph) -> Graph:
                     changed = True
                     break
     return Graph(_topo(nodes, g.outputs), g.outputs)
+
+
+def fuse_shared_gather(g: Graph) -> Graph:
+    """Pass 1b: an ``allgather`` consumed by *several* ``gemm_col`` nodes
+    (fused QKV, gate+up) becomes one ``ag_gemm_multi``: the activation
+    circulates the ring once and every weight consumes each arriving chunk
+    (the multi-weight pull alignment the hand-fused sub-layers used)."""
+    nodes = list(g.nodes)
+    for n in nodes:
+        if n.op != "allgather" or n.name in g.outputs:
+            continue
+        cs = g.consumers(n.name)
+        if len(cs) < 2 or any(c.op != "gemm_col" for c in cs):
+            continue
+        fused = Node("+".join(c.name for c in cs), "ag_gemm_multi",
+                     n.inputs,
+                     tuple(w for c in cs for w in c.weights),
+                     outputs=tuple(c.name for c in cs))
+        drop = {n.name} | {c.name for c in cs}
+        nodes = [x for x in nodes if x.name not in drop] + [fused]
+        return fuse_shared_gather(Graph(_topo(nodes, g.outputs), g.outputs))
+    return g
 
 
 def fuse_sublayer_chain(g: Graph) -> Graph:
@@ -205,6 +237,7 @@ def pair_asymmetric(g: Graph) -> Graph:
 
 def optimize(g: Graph, asymmetric: bool = True) -> Graph:
     g = fuse_compute_aware(g)
+    g = fuse_shared_gather(g)
     g = fuse_sublayer_chain(g)
     if asymmetric:
         g = pair_asymmetric(g)
@@ -238,14 +271,20 @@ def _topo(nodes: List[Node], outputs) -> List[Node]:
 
 def execute(g: Graph, values: Dict[str, jnp.ndarray],
             weights: Dict[str, jnp.ndarray], axis: Optional[str] = None,
-            cais: CAISConfig = CAISConfig(), norm: str = "rmsnorm"):
+            cais: CAISConfig = CAISConfig(), norm: str = "rmsnorm",
+            backend=None):
     """Evaluate the graph. With ``axis`` set this must run inside shard_map
-    (values/weights are local shards per the layout conventions); without it,
-    collectives degenerate to identity/plain math (single-device reference)."""
+    (values/weights are local shards per the layout conventions) and every
+    fused collective op dispatches through ``backend`` — a
+    :class:`repro.core.backends.CollectiveBackend` instance or registry name
+    (default ``"cais"``). Without ``axis``, collectives degenerate to
+    identity/plain math (single-device reference)."""
+    from repro.core.backends import get_backend
     from repro.models.layers import apply_norm
 
     env = dict(values)
     dist = axis is not None
+    be = get_backend(backend if backend is not None else "cais")
 
     for n in g.nodes:
         if n.op == "input":
@@ -267,21 +306,28 @@ def execute(g: Graph, values: Dict[str, jnp.ndarray],
             env[n.name] = apply_norm(norm, {"scale": ws[0]}, ins[0])
         elif n.op == "add":
             env[n.name] = ins[0] + ins[1]
+        elif n.op == "custom":
+            env[n.name] = n.fn(*ins)
         elif n.op == "ag_gemm":
-            env[n.name] = (prim.ag_gemm(ins[0], ws[0], axis, cais)
+            env[n.name] = (be.ag_gemm(ins[0], ws[0], axis, cais)
                            if dist else ins[0] @ ws[0])
+        elif n.op == "ag_gemm_multi":
+            outs = (be.ag_gemm_multi(ins[0], tuple(ws), axis, cais)
+                    if dist else tuple(ins[0] @ w for w in ws))
+            for name, val in zip(n.outputs, outs):
+                env[name] = val
         elif n.op == "gemm_rs":
-            env[n.name] = (prim.gemm_rs(ins[0], ws[0], axis, cais)
+            env[n.name] = (be.gemm_rs(ins[0], ws[0], axis, cais)
                            if dist else ins[0] @ ws[0])
         elif n.op == "gemm_ar":
-            env[n.name] = (prim.gemm_ar(ins[0], ws[0], axis, cais)
+            env[n.name] = (be.gemm_ar(ins[0], ws[0], axis, cais)
                            if dist else ins[0] @ ws[0])
         elif n.op == "fused_rs_ln_ag":
             w1, scale, w2 = ws
             res = env[n.inputs[1]] if len(n.inputs) > 1 else None
             if dist:
-                out, z = prim.fused_rs_ln_ag(ins[0], w1, scale, w2, axis,
-                                             cais, norm=norm, residual=res)
+                out, z = be.fused_rs_ln_ag(ins[0], w1, scale, w2, axis,
+                                           cais, norm=norm, residual=res)
             else:
                 z = ins[0] @ w1
                 if res is not None:
@@ -291,7 +337,7 @@ def execute(g: Graph, values: Dict[str, jnp.ndarray],
         elif n.op == "overlap_asym":
             w_rs, w_ag = ws
             if dist:
-                rs_out, ag_out = prim.overlap_asymmetric(
+                rs_out, ag_out = be.overlap_asymmetric(
                     (ins[0], w_rs), (ins[1], w_ag), axis, cais)
             else:
                 rs_out, ag_out = ins[0] @ w_rs, ins[1] @ w_ag

@@ -39,12 +39,21 @@ import jax.numpy as jnp
 from jax import lax
 
 
+DEFAULT_NUM_CHUNKS = 4
+
+
 @dataclass(frozen=True)
 class CAISConfig:
-    """Chunking/scheduling knobs (see repro.core.coordination)."""
+    """Chunking/scheduling knobs (see repro.core.coordination).
 
-    num_chunks: int = 4          # micro-chunks per local shard
-    bidirectional: bool = True   # use both ring directions
+    ``num_chunks=None`` leaves the chunking open: the ``cais``
+    :mod:`repro.core.backends` backend then plans it per collective from
+    payload bytes and ring size via ``coordination.plan``; primitives called
+    directly fall back to ``DEFAULT_NUM_CHUNKS``. An explicit integer is a
+    static override honored everywhere."""
+
+    num_chunks: Optional[int] = None   # micro-chunks per local shard
+    bidirectional: bool = True         # use both ring directions
     interpret_n: Optional[int] = None  # override ring size (tests)
 
 
@@ -55,7 +64,8 @@ def _ring_perms(n: int, direction: int) -> Sequence[Tuple[int, int]]:
 
 
 def _axis_size(axis: str) -> int:
-    return lax.axis_size(axis)
+    from repro.sharding import shard_map_axis_size
+    return shard_map_axis_size(axis)
 
 
 # ---------------------------------------------------------------------------
@@ -158,7 +168,9 @@ def ag_gemm(x: jnp.ndarray, w: jnp.ndarray, axis: str,
     return ag_gemm_multi(x, (w,), axis, cais)[0]
 
 
-def _pick_chunks(s_loc: int, requested: int) -> int:
+def _pick_chunks(s_loc: int, requested: Optional[int]) -> int:
+    if requested is None:
+        requested = DEFAULT_NUM_CHUNKS
     c = max(1, min(requested, s_loc))
     while s_loc % c:
         c -= 1

@@ -1,23 +1,25 @@
-"""Tensor-parallel block execution in three modes (pjit-callable wrappers):
+"""Tensor-parallel block execution (pjit-callable wrappers).
 
-  * ``auto``    — plain jnp + sharding constraints; XLA chooses/schedules the
-                  collectives (the strong compiler baseline).
-  * ``barrier`` — explicit ``shard_map`` with *monolithic* collectives around
-                  each GEMM: the NVLS-style communication-centric structure
-                  (one opaque all-gather / reduce-scatter phase).
-  * ``cais``    — explicit ``shard_map`` with the decomposed collective-fused
-                  schedules from :mod:`repro.core.primitives` (the paper's
-                  technique, TPU-native).
+Every explicit-TP sub-layer dispatches through a
+:class:`repro.core.backends.CollectiveBackend` — ``barrier`` (monolithic
+NVLS-style collectives), ``cais`` (the paper's decomposed collective-fused
+schedules), or any backend registered by the caller. ``auto`` is the
+XLA-scheduled baseline: it reports ``explicit = False`` and the model path
+skips ``shard_map`` entirely (plain jnp + sharding constraints).
 
-The unit of execution is the transformer sub-layer chain the paper evaluates
-(L1–L4): [attention out-GEMM →RS] + LN + [AG→ FFN GEMMs] — see
-``sp_attention`` and ``sp_ffn``.
+The dense sub-layers are *IR-driven*: ``sp_ffn`` / ``sp_attention`` build a
+:mod:`repro.core.dataflow` graph of primitive ops (LN, allgather, gemm_col,
+gemm_row, reduce_scatter, local custom math), run the graph-level optimizer
+(paper §III-C: compute-aware alignment, shared-gather multi fusion, deep
+chain fusion, asymmetric pairing), and ``execute()`` the optimized graph
+inside ``shard_map`` — so new fusion rules land in the transformer without
+touching the sub-layers. The unit of execution is the sub-layer chain the
+paper evaluates (L1–L4): [attention out-GEMM →RS] + LN + [AG→ FFN GEMMs].
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Optional, Tuple
+from typing import Callable, Union
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +27,8 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro import sharding
-from repro.core import primitives as prim
+from repro.core import dataflow as df
+from repro.core.backends import CollectiveBackend, get_backend
 from repro.core.primitives import CAISConfig
 
 BATCH = sharding.BATCH_AXES
@@ -34,9 +37,22 @@ MODEL = sharding.MODEL_AXIS
 
 @dataclass(frozen=True)
 class TPContext:
+    """Mesh + collective backend + chunking config for explicit TP.
+
+    ``backend`` may be given as a registry name (``"barrier"``, ``"cais"``,
+    …) or a :class:`CollectiveBackend` instance; it is resolved to an
+    instance at construction."""
+
     mesh: Mesh
-    mode: str = "cais"               # barrier | cais
+    backend: Union[str, CollectiveBackend] = "cais"
     cais: CAISConfig = CAISConfig()
+
+    def __post_init__(self):
+        object.__setattr__(self, "backend", get_backend(self.backend))
+
+    @property
+    def mode(self) -> str:
+        return self.backend.name
 
     @property
     def tp(self) -> int:
@@ -48,13 +64,63 @@ def _specs(mesh, *entries):
 
 
 def _smap(tpc: TPContext, fn, in_specs, out_specs):
-    return jax.shard_map(
+    return sharding.shard_map(
         fn, mesh=tpc.mesh,
         in_specs=tuple(_specs(tpc.mesh, *s) for s in in_specs),
         out_specs=(tuple(_specs(tpc.mesh, *s) for s in out_specs)
                    if isinstance(out_specs, list)
                    else _specs(tpc.mesh, *out_specs)),
         check_vma=False)
+
+
+# ---------------------------------------------------------------------------
+# Sub-layer dataflow graphs (lowered via dataflow.optimize + execute)
+# ---------------------------------------------------------------------------
+
+
+def ffn_sublayer_graph(has_gate: bool, act: str) -> df.Graph:
+    """LN → AG → GEMM(up[, gate]) → act[(·)] → GEMM(down) → RS as IR nodes.
+    ``optimize()`` turns the collectives into the backend's fused schedules
+    (ag_gemm / ag_gemm_multi / gemm_rs)."""
+    from repro.models.layers import activation
+
+    nodes = [
+        df.Node("x", "input"),
+        df.Node("ln", "layernorm", ("x",), ("scale",)),
+        df.Node("agx", "allgather", ("ln",)),
+        df.Node("up", "gemm_col", ("agx",), ("w_up",)),
+    ]
+    if has_gate:
+        nodes.append(df.Node("gate", "gemm_col", ("agx",), ("w_gate",)))
+        nodes.append(df.Node("h", "custom", ("up", "gate"),
+                             fn=lambda u, g: activation(act, g) * u))
+    else:
+        nodes.append(df.Node("h", "custom", ("up",),
+                             fn=lambda u: activation(act, u)))
+    nodes += [
+        df.Node("down", "gemm_row", ("h",), ("w_down",)),
+        df.Node("out", "reduce_scatter", ("down",)),
+    ]
+    return df.Graph(nodes, outputs=("out",))
+
+
+def attention_sublayer_graph(core_fn: Callable) -> df.Graph:
+    """LN → AG → GEMM(q|k|v) → attention core → GEMM(out) → RS as IR nodes.
+    ``core_fn(q, k, v)`` is the local attention math (rope, KV slicing,
+    flash core, head reshape) — a ``custom`` node the optimizer schedules
+    collectives around."""
+    nodes = [
+        df.Node("x", "input"),
+        df.Node("ln", "layernorm", ("x",), ("scale",)),
+        df.Node("agx", "allgather", ("ln",)),
+        df.Node("q", "gemm_col", ("agx",), ("wq",)),
+        df.Node("k", "gemm_col", ("agx",), ("wk",)),
+        df.Node("v", "gemm_col", ("agx",), ("wv",)),
+        df.Node("o", "custom", ("q", "k", "v"), fn=core_fn),
+        df.Node("proj", "gemm_row", ("o",), ("wo",)),
+        df.Node("out", "reduce_scatter", ("proj",)),
+    ]
+    return df.Graph(nodes, outputs=("out",))
 
 
 # ---------------------------------------------------------------------------
@@ -66,47 +132,25 @@ def sp_ffn(tpc: TPContext, x, norm_scale, w_up, w_gate, w_down,
            act: str, norm_kind: str = "rmsnorm"):
     """x: (B, S, d) logically sequence-sharded. Returns FFN(LN(x)) with the
     residual handled by the caller. ``w_gate`` may be None."""
-    from repro.models.layers import activation, apply_norm, gated
-
     has_gate = w_gate is not None
-    cais = tpc.cais
+    graph = df.optimize(ffn_sublayer_graph(has_gate, act))
+    wnames = ("scale", "w_up") + (("w_gate",) if has_gate else ()) + \
+        ("w_down",)
 
-    def local(x, norm_scale, w_up, w_gate, w_down):
-        # x: (B, S_loc, d) local shard; weights local shards
-        xn = apply_norm(norm_kind, {"scale": norm_scale}, x)
-        if tpc.mode == "barrier":
-            h = prim.barrier_ag_gemm(xn, w_up, MODEL)
-            if has_gate:
-                g = prim.barrier_ag_gemm(xn, w_gate, MODEL)
-                h = activation(act, g) * h
-            else:
-                h = activation(act, h)
-            return prim.barrier_gemm_rs(h, w_down, MODEL)
-        ws = (w_up, w_gate) if has_gate else (w_up,)
-        outs = prim.ag_gemm_multi(xn, ws, MODEL, cais)
-        if has_gate:
-            h = activation(act, outs[1]) * outs[0]
-        else:
-            h = activation(act, outs[0])
-        return prim.gemm_rs(h, w_down, MODEL, cais)
+    def local(x, *ws):
+        return df.execute(graph, {"x": x}, dict(zip(wnames, ws)),
+                          axis=MODEL, cais=tpc.cais, norm=norm_kind,
+                          backend=tpc.backend)[0]
 
-    gate_spec = (None, MODEL) if has_gate else (None, MODEL)
-    fn = _smap(
-        tpc, local,
-        in_specs=[(BATCH, MODEL, None),      # x sequence-sharded
-                  (None,),                   # norm scale replicated
-                  (None, MODEL),             # up col-sharded
-                  gate_spec,                 # gate col-sharded
-                  (MODEL, None)],            # down row-sharded
-        out_specs=(BATCH, MODEL, None))
+    in_specs = [(BATCH, MODEL, None),            # x sequence-sharded
+                (None,),                         # norm scale replicated
+                (None, MODEL)]                   # up col-sharded
     if has_gate:
-        return fn(x, norm_scale, w_up, w_gate, w_down)
-    # shard_map needs a concrete arg; pass up again as a dummy for the slot
-    return _smap(
-        tpc, lambda x, ns, wu, wd: local(x, ns, wu, None, wd),
-        in_specs=[(BATCH, MODEL, None), (None,), (None, MODEL),
-                  (MODEL, None)],
-        out_specs=(BATCH, MODEL, None))(x, norm_scale, w_up, w_down)
+        in_specs.append((None, MODEL))           # gate col-sharded
+    in_specs.append((MODEL, None))               # down row-sharded
+    args = (x, norm_scale, w_up) + ((w_gate,) if has_gate else ()) + \
+        (w_down,)
+    return _smap(tpc, local, in_specs, (BATCH, MODEL, None))(*args)
 
 
 # ---------------------------------------------------------------------------
@@ -117,31 +161,21 @@ def sp_ffn(tpc: TPContext, x, norm_scale, w_up, w_gate, w_down,
 def sp_attention(tpc: TPContext, x, norm_scale, wq, wk, wv, wo, cfg,
                  window: int = 0, prefix_len: int = 0,
                  norm_kind: str = "rmsnorm"):
-    """Full Megatron-SP attention block with CAIS/barrier collectives.
+    """Full Megatron-SP attention block over the collective backend.
     x: (B, S, d) sequence-sharded; Q heads shard over `model`. When
     num_kv_heads < tp (GQA/MQA), K/V weights replicate and every device
     computes the full K/V from the same gathered activation chunks — the
     standard Megatron KV-replication, and the gather is still shared with
-    the Q projection (one CAIS ring feeds all three)."""
+    the Q projection (one ring circulation feeds all three)."""
     from repro.models.attention import attention_core
-    from repro.models.layers import apply_norm, apply_rope
+    from repro.models.layers import apply_rope
 
     H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     tp = tpc.tp
-    cais = tpc.cais
     kv_sharded = Hkv % tp == 0
 
-    def local(x, norm_scale, wq, wk, wv, wo):
-        B, S_loc, d = x.shape
-        xn = apply_norm(norm_kind, {"scale": norm_scale}, x)
-        if tpc.mode == "barrier":
-            q = prim.barrier_ag_gemm(xn, wq, MODEL)
-            k = prim.barrier_ag_gemm(xn, wk, MODEL)
-            v = prim.barrier_ag_gemm(xn, wv, MODEL)
-        else:
-            q, k, v = prim.ag_gemm_multi(xn, (wq, wk, wv), MODEL, cais)
-        S = q.shape[1]
-        B_ = q.shape[0]
+    def core(q, k, v):
+        B_, S = q.shape[0], q.shape[1]
         H_loc = max(H // tp, 1)
         Hkv_loc = max(Hkv // tp, 1) if kv_sharded else Hkv
         pos = jnp.broadcast_to(jnp.arange(S), (B_, S))
@@ -158,10 +192,16 @@ def sp_attention(tpc: TPContext, x, norm_scale, wq, wk, wv, wo, cfg,
             v = jax.lax.dynamic_slice_in_dim(v, start, need, axis=2)
         o = attention_core(q, k, v, q_positions=pos, kv_positions=pos,
                            causal=True, window=window, prefix_len=prefix_len)
-        o = o.reshape(B_, S, H_loc * dh)
-        if tpc.mode == "barrier":
-            return prim.barrier_gemm_rs(o, wo, MODEL)
-        return prim.gemm_rs(o, wo, MODEL, cais)
+        return o.reshape(B_, S, H_loc * dh)
+
+    graph = df.optimize(attention_sublayer_graph(core))
+
+    def local(x, norm_scale, wq, wk, wv, wo):
+        return df.execute(graph, {"x": x},
+                          {"scale": norm_scale, "wq": wq, "wk": wk,
+                           "wv": wv, "wo": wo},
+                          axis=MODEL, cais=tpc.cais, norm=norm_kind,
+                          backend=tpc.backend)[0]
 
     kv_spec = (None, MODEL) if kv_sharded else (None, None)
     return _smap(
@@ -173,16 +213,16 @@ def sp_attention(tpc: TPContext, x, norm_scale, wq, wk, wv, wo, cfg,
 
 
 # ---------------------------------------------------------------------------
-# MoE FFN sub-layer over EP: CAIS-decomposed expert all-to-all
+# MoE FFN sub-layer over EP: backend-dispatched expert all-to-all
 # ---------------------------------------------------------------------------
 
 
 def sp_moe_ffn(tpc: TPContext, x, norm_scale, params, cfg,
                norm_kind: str = "rmsnorm"):
-    """MoE FFN with the CAIS expert-a2a pipeline (beyond-paper extension,
-    EXPERIMENTS.md §Perf cell 2): each device routes its sequence shard's
-    tokens to expert owners with interleaved ±direction dispatch/combine
-    permutes overlapped with the expert GEMMs.
+    """MoE FFN with the backend's expert-a2a pipeline (beyond-paper
+    extension, EXPERIMENTS.md §Perf cell 2): each device routes its sequence
+    shard's tokens to expert owners; the ``cais`` backend overlaps the
+    interleaved ±direction dispatch/combine permutes with the expert GEMMs.
 
     Owner mapping: device j owns experts [j·E_loc, (j+1)·E_loc) when
     E ≥ tp (E % tp == 0); when E < tp (tp % E == 0) expert e lives on
@@ -190,7 +230,7 @@ def sp_moe_ffn(tpc: TPContext, x, norm_scale, params, cfg,
     zero-capacity padding). x: (B, S, d) sequence-sharded. Returns FFN(LN(x))
     (residual handled by the caller) and the load-balancing aux loss."""
     from repro.models.ffn import _top2_dispatch
-    from repro.models.layers import activation, apply_norm, gated
+    from repro.models.layers import activation, apply_norm
 
     m = cfg.moe
     E = m.num_experts
@@ -242,10 +282,7 @@ def sp_moe_ffn(tpc: TPContext, x, norm_scale, params, cfg,
             out = jnp.einsum("ecf,efd->ecd", h, wd_l)
             return out.reshape(chunk.shape)
 
-        if tpc.mode == "barrier":
-            ret = prim.barrier_a2a_expert_ffn(send, expert_ffn, MODEL)
-        else:
-            ret = prim.a2a_expert_ffn(send, expert_ffn, MODEL, cais)
+        ret = tpc.backend.a2a_expert_ffn(send, expert_ffn, MODEL, cais)
 
         if E >= tp:
             eout = ret.reshape(E, cap, d)
@@ -274,9 +311,9 @@ def sp_moe_ffn(tpc: TPContext, x, norm_scale, params, cfg,
 
 
 def tp_applicable(cfg, kind: str, tp: int) -> bool:
-    """CAIS/barrier shard_map path requires Q-head and feature divisibility
-    (KV heads may replicate); otherwise the block stays on the `auto` path
-    (DESIGN.md §5)."""
+    """Explicit-backend shard_map path requires Q-head and feature
+    divisibility (KV heads may replicate); otherwise the block stays on the
+    `auto` path (DESIGN.md §5)."""
     if kind in ("attn", "swa"):
         return cfg.num_heads % tp == 0 and cfg.norm == "rmsnorm"
     if kind == "ffn":

@@ -28,7 +28,7 @@ from repro.runtime import Runtime                       # noqa: E402
 
 
 def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
-               tp_mode: str = "auto", cais_chunks: int = 8,
+               tp_mode: str = "auto", cais_chunks: "int | None" = None,
                rt_overrides: dict = None):
     """Lower + compile one (arch × shape × mesh) cell. Returns (lowered,
     compiled, meta). ``rt_overrides`` patches Runtime fields (the §Perf
@@ -93,7 +93,7 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
 
 
 def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
-             tp_mode: str = "auto", cais_chunks: int = 8,
+             tp_mode: str = "auto", cais_chunks: "int | None" = None,
              verbose: bool = True, rt_overrides: dict = None) -> dict:
     t0 = time.monotonic()
     n_chips = 512 if multi_pod else 256
@@ -146,9 +146,12 @@ def main():
     ap.add_argument("--shape", default="all")
     ap.add_argument("--mesh", default="both",
                     choices=["single", "multi", "both"])
+    from repro.core.backends import available_backends
     ap.add_argument("--tp-mode", default="auto",
-                    choices=["auto", "barrier", "cais"])
-    ap.add_argument("--cais-chunks", type=int, default=8)
+                    choices=available_backends())
+    ap.add_argument("--cais-chunks", type=int, default=None,
+                    help="static ring-chunk override; default lets the cais "
+                         "backend plan per collective")
     ap.add_argument("--out", default="reports/dryrun")
     args = ap.parse_args()
 

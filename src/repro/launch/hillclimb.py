@@ -24,6 +24,10 @@ VARIANTS = {
     "cais8": ("CAIS decomposed bidirectional ring schedules, 8 chunks: "
               "collective bytes move to collective-permute and overlap "
               "with partial GEMMs", "cais", 8, {}),
+    "cais-plan": ("compute-aware chunking: the cais backend picks "
+                  "num_chunks per collective from payload bytes and ring "
+                  "size (coordination.plan) instead of one static value",
+                  "cais", None, {}),
     "cais2": ("coarser chunks (2): fewer permutes, bigger staging buffer — "
               "latency ↓, overlap granularity ↓", "cais", 2, {}),
     "cais16": ("finer chunks (16): finer overlap, more per-hop latency",

@@ -5,9 +5,7 @@ touches jax device state (smoke tests and benches must see 1 device; only
 the dry-run forces 512 virtual hosts)."""
 from __future__ import annotations
 
-import jax
-
-from repro.sharding import DATA_AXIS, MODEL_AXIS, POD_AXIS
+from repro.sharding import DATA_AXIS, MODEL_AXIS, POD_AXIS, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,12 +14,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = (POD_AXIS, DATA_AXIS, MODEL_AXIS) if multi_pod \
         else (DATA_AXIS, MODEL_AXIS)
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 2, model: int = 4):
     """Small mesh for the 8-virtual-device test suite."""
-    return jax.make_mesh(
-        (data, model), (DATA_AXIS, MODEL_AXIS),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), (DATA_AXIS, MODEL_AXIS))

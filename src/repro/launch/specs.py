@@ -35,8 +35,10 @@ _ROW = {"wo", "w_out"}
 
 
 def runtime_for(cfg: ArchConfig, tp_mode: str = "auto",
-                cais_chunks: int = 8) -> Runtime:
-    """Per-arch runtime defaults for the production meshes."""
+                cais_chunks: Optional[int] = None) -> Runtime:
+    """Per-arch runtime defaults for the production meshes. ``tp_mode`` is
+    any registered collective backend name; ``cais_chunks=None`` lets the
+    cais backend plan the chunking per collective."""
     param_dtype = "bfloat16" if cfg.param_count() > 6e10 else "float32"
     return Runtime(compute_dtype="bfloat16", param_dtype=param_dtype,
                    tp_mode=tp_mode, cais_chunks=cais_chunks,

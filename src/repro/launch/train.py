@@ -17,6 +17,7 @@ import jax
 
 from repro import sharding
 from repro.configs import SHAPES_BY_NAME, ShapeConfig, get_arch
+from repro.core.backends import available_backends
 from repro.data.pipeline import DataConfig
 from repro.launch import specs as S
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
@@ -33,7 +34,7 @@ def main() -> None:
     ap.add_argument("--mesh", default="none",
                     choices=["none", "debug", "single", "multi"])
     ap.add_argument("--tp-mode", default="auto",
-                    choices=["auto", "barrier", "cais"])
+                    choices=available_backends())
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--warmup", type=int, default=20)

@@ -70,15 +70,19 @@ def _mixer_forward(kind, params, x, cfg, prefix_len=0):
 
 
 def _tp_context(rt: Runtime):
-    """Build a TPContext when an explicit (barrier/cais) TP mode is active."""
+    """Build a TPContext when an explicit collective backend is active
+    (backends with ``explicit = False`` — e.g. ``auto`` — leave scheduling
+    to XLA and run without shard_map)."""
+    from repro.core.backends import get_backend
     from repro.core.primitives import CAISConfig
     from repro.core.tp import TPContext
 
+    backend = get_backend(rt.tp_mode)
     mesh = sharding.current_mesh()
-    if (rt.tp_mode == "auto" or mesh is None
+    if (not backend.explicit or mesh is None
             or sharding.axis_size(mesh, sharding.MODEL_AXIS) <= 1):
         return None
-    return TPContext(mesh=mesh, mode=rt.tp_mode,
+    return TPContext(mesh=mesh, backend=backend,
                      cais=CAISConfig(num_chunks=rt.cais_chunks,
                                      bidirectional=rt.cais_bidirectional))
 

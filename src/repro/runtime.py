@@ -6,6 +6,7 @@ different distribution/precision strategies (baseline vs CAIS vs hillclimbed).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import jax.numpy as jnp
 
@@ -18,9 +19,11 @@ class Runtime:
     compute_dtype: str = "bfloat16"
     param_dtype: str = "float32"
     # distribution
+    tp_mode: str = "auto"               # any repro.core.backends name
     sequence_parallel: bool = True      # SP-TP layout (paper's primary)
-    tp_mode: str = "auto"               # auto | barrier | cais (core/primitives)
-    cais_chunks: int = 8                # ring chunks (merge-table analogue)
+    # ring chunks (merge-table analogue); None = the cais backend plans the
+    # chunking per collective from payload bytes via coordination.plan()
+    cais_chunks: Optional[int] = None
     cais_bidirectional: bool = True     # asymmetric/bidirectional overlap
     # memory
     remat: bool = True                  # activation checkpointing per period

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro import sharding
 from repro.configs.base import ArchConfig
+from repro.core.backends import get_backend
 from repro.runtime import Runtime
 
 
@@ -44,6 +45,9 @@ class Engine:
         self.params = params
         self.cfg = cfg
         self.rt = rt
+        # resolve the collective backend up front: an unknown tp_mode fails
+        # at engine construction, not deep inside the first jitted prefill
+        self.backend = get_backend(rt.tp_mode)
         self.sc = serve_cfg
         self.mesh = mesh
         self.extras = extras or {}

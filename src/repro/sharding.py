@@ -23,6 +23,38 @@ POD_AXIS = "pod"
 DATA_AXIS = "data"
 MODEL_AXIS = "model"
 
+
+def make_mesh(shape, axes) -> Mesh:
+    """Version-portable ``jax.make_mesh`` with Auto axis types when the
+    running jax supports them (older releases have neither ``AxisType`` nor
+    the ``axis_types`` parameter)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def shard_map_axis_size(axis: str) -> int:
+    """Size of a named mesh axis from *inside* shard_map, version-portable:
+    newer jax has ``lax.axis_size``; older releases constant-fold
+    ``psum(1, axis)`` to the same value."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-portable ``shard_map``: newer jax exposes ``jax.shard_map``
+    (with ``check_vma``); older releases ship it under ``jax.experimental``
+    (where the flag is ``check_rep``). All repo code routes through here."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
 # Batch dims shard over every data-parallel axis present on the mesh.
 BATCH_AXES = (POD_AXIS, DATA_AXIS)
 

@@ -1,0 +1,69 @@
+"""Use hypothesis when installed; otherwise a deterministic fallback.
+
+The container image does not always ship `hypothesis` (see
+requirements-dev.txt), and a missing property-testing dependency must not
+break tier-1 *collection*. When the real library is absent, ``given`` runs
+the test over a small deterministic grid of boundary/midpoint samples per
+strategy (capped product) and ``settings`` is a no-op — weaker than real
+property testing, but the invariants still get exercised.
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # fallback mini-strategies
+    import itertools
+
+    HAVE_HYPOTHESIS = False
+    _MAX_CASES = 24
+
+    class _Samples:
+        def __init__(self, values):
+            self.values = list(values)
+
+    class _St:
+        @staticmethod
+        def floats(lo, hi):
+            return _Samples([lo, hi, (lo + hi) / 2, lo + (hi - lo) * 0.1])
+
+        @staticmethod
+        def integers(lo, hi):
+            return _Samples(sorted({lo, min(lo + 1, hi), (lo + hi) // 2, hi}))
+
+        @staticmethod
+        def sampled_from(values):
+            return _Samples(values)
+
+        @staticmethod
+        def booleans():
+            return _Samples([False, True])
+
+    st = _St()
+
+    def given(**strategies):
+        names = list(strategies)
+
+        def deco(fn):
+            # plain zero-arg wrapper: pytest must not see the strategy
+            # kwargs in the signature (it would treat them as fixtures)
+            def wrapper():
+                cases = list(itertools.product(
+                    *(strategies[n].values for n in names)))
+                # stride-sample so every strategy's boundary values appear
+                # (a prefix cut would only ever vary the last strategy)
+                step = max(1, -(-len(cases) // _MAX_CASES))
+                for combo in cases[::step]:
+                    fn(**dict(zip(names, combo)))
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+    def settings(**kwargs):
+        def deco(fn):
+            return fn
+
+        return deco

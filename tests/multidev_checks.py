@@ -31,7 +31,6 @@ def check(name, err, tol=1e-4):
 
 def main():
     assert len(jax.devices()) == 8, jax.devices()
-    ax = (jax.sharding.AxisType.Auto,)
 
     # ---------------- primitives on TP rings of size 2 / 4 / 8 ------------
     B, S, d, F = 2, 64, 32, 48
@@ -40,31 +39,30 @@ def main():
     ref = x @ w
 
     for ring in (2, 4, 8):
-        rmesh = jax.make_mesh((8 // ring, ring), ("data", "model"),
-                              axis_types=ax * 2)
+        rmesh = sharding.make_mesh((8 // ring, ring), ("data", "model"))
         cais = CAISConfig(num_chunks=2, bidirectional=True)
-        y = jax.jit(jax.shard_map(
+        y = jax.jit(sharding.shard_map(
             lambda xl, wl: prim.ag_gemm(xl, wl, "model", cais),
             mesh=rmesh, in_specs=(P(None, "model", None), P(None, "model")),
             out_specs=P(None, None, "model"), check_vma=False))(x, w)
         check(f"ag_gemm.ring{ring}", float(jnp.abs(y - ref).max()))
-        y2 = jax.jit(jax.shard_map(
+        y2 = jax.jit(sharding.shard_map(
             lambda xl, wl: prim.gemm_rs(xl, wl, "model", cais),
             mesh=rmesh, in_specs=(P(None, None, "model"), P("model", None)),
             out_specs=P(None, "model", None), check_vma=False))(x, w)
         check(f"gemm_rs.ring{ring}", float(jnp.abs(y2 - ref).max()))
 
-    mesh = jax.make_mesh((8,), ("model",), axis_types=ax)
+    mesh = sharding.make_mesh((8,), ("model",))
     for chunks in (1, 2, 4):
         for bidir in (False, True):
             cais = CAISConfig(num_chunks=chunks, bidirectional=bidir)
-            y = jax.jit(jax.shard_map(
+            y = jax.jit(sharding.shard_map(
                 lambda xl, wl: prim.ag_gemm(xl, wl, "model", cais),
                 mesh=mesh, in_specs=(P(None, "model", None), P(None, "model")),
                 out_specs=P(None, None, "model"), check_vma=False))(x, w)
             check(f"ag_gemm.c{chunks}.b{int(bidir)}",
                   float(jnp.abs(y - ref).max()))
-            y2 = jax.jit(jax.shard_map(
+            y2 = jax.jit(sharding.shard_map(
                 lambda xl, wl: prim.gemm_rs(xl, wl, "model", cais),
                 mesh=mesh, in_specs=(P(None, None, "model"), P("model", None)),
                 out_specs=P(None, "model", None), check_vma=False))(x, w)
@@ -72,7 +70,7 @@ def main():
                   float(jnp.abs(y2 - ref).max()))
 
     cais = CAISConfig(num_chunks=2)
-    y3 = jax.jit(jax.shard_map(
+    y3 = jax.jit(sharding.shard_map(
         lambda xl, wl: prim.gemm_ar(xl, wl, "model", cais),
         mesh=mesh, in_specs=(P(None, None, "model"), P("model", None)),
         out_specs=P(None, None, None), check_vma=False))(x, w)
@@ -80,7 +78,7 @@ def main():
 
     x2 = jax.random.normal(jax.random.key(2), (B, S, d))
     w2 = jax.random.normal(jax.random.key(3), (d, F)) * 0.1
-    o1, o2 = jax.jit(jax.shard_map(
+    o1, o2 = jax.jit(sharding.shard_map(
         lambda a, b, c, e: prim.overlap_asymmetric((a, b), (c, e), "model",
                                                    cais),
         mesh=mesh,
@@ -100,12 +98,12 @@ def main():
     wu = jax.random.normal(jax.random.key(6), (F, d)) * 0.1
     refdf = df.execute(g, {"x": x}, {"w1": w1, "scale": scale, "w2": wu})[0]
 
-    def run_graph(graph):
+    def run_graph(graph, backend="cais"):
         def local(x, w1, scale, w2):
             return df.execute(graph, {"x": x},
                               {"w1": w1, "scale": scale, "w2": w2},
-                              axis="model", cais=cais)
-        return jax.jit(jax.shard_map(
+                              axis="model", cais=cais, backend=backend)
+        return jax.jit(sharding.shard_map(
             local, mesh=mesh,
             in_specs=(P(None, None, "model"), P("model", None), P(),
                       P(None, "model")),
@@ -114,9 +112,130 @@ def main():
 
     check("dataflow.unopt", float(jnp.abs(run_graph(g) - refdf).max()), 1e-3)
     check("dataflow.opt", float(jnp.abs(run_graph(opt) - refdf).max()), 1e-3)
+    check("dataflow.opt_barrier",
+          float(jnp.abs(run_graph(opt, "barrier") - refdf).max()), 1e-3)
+
+    # ---------------- graph-routed sub-layers vs hand-fused ---------------
+    # sp_ffn / sp_attention now build + optimize + execute a dataflow graph;
+    # pin them to the pre-refactor hand-fused schedules (written out inline
+    # with the raw primitives) on a 4-way ring, per backend.
+    from repro.core import tp as tp_mod
+    from repro.core.primitives import CAISConfig as CC
+    from repro.models.layers import activation, apply_norm
+
+    mesh4 = sharding.make_mesh((2, 4), ("data", "model"))
+    d_ff = 96
+    ksub = jax.random.split(jax.random.key(20), 4)
+    ns = jax.random.normal(ksub[0], (d,)) * 0.1 + 1.0
+    wu4 = jax.random.normal(ksub[1], (d, d_ff)) * 0.1
+    wg4 = jax.random.normal(ksub[2], (d, d_ff)) * 0.1
+    wd4 = jax.random.normal(ksub[3], (d_ff, d)) * 0.1
+    cais4 = CC(num_chunks=2)
+
+    def hand_fused_ffn(mode):
+        """The pre-refactor sp_ffn local body (tp.py@636bb1c)."""
+        def local(x, ns, wu, wg, wd):
+            xn = apply_norm("rmsnorm", {"scale": ns}, x)
+            if mode == "barrier":
+                h = prim.barrier_ag_gemm(xn, wu, "model")
+                g_ = prim.barrier_ag_gemm(xn, wg, "model")
+                h = activation("silu", g_) * h
+                return prim.barrier_gemm_rs(h, wd, "model")
+            outs = prim.ag_gemm_multi(xn, (wu, wg), "model", cais4)
+            h = activation("silu", outs[1]) * outs[0]
+            return prim.gemm_rs(h, wd, "model", cais4)
+        return jax.jit(sharding.shard_map(
+            local, mesh=mesh4,
+            in_specs=(P(None, "model", None), P(None,), P(None, "model"),
+                      P(None, "model"), P("model", None)),
+            out_specs=P(None, "model", None), check_vma=False))(
+                x, ns, wu4, wg4, wd4)
+
+    for mode in ("barrier", "cais"):
+        tpc4 = tp_mod.TPContext(mesh=mesh4, backend=mode, cais=cais4)
+        got = tp_mod.sp_ffn(tpc4, x, ns, wu4, wg4, wd4, "silu")
+        check(f"sp_ffn.graph_vs_handfused.{mode}",
+              float(jnp.abs(got - hand_fused_ffn(mode)).max()), 1e-5)
+        # auto-planned chunking must agree with static chunking numerics
+        tpc4p = tp_mod.TPContext(mesh=mesh4, backend=mode, cais=CC())
+        gotp = tp_mod.sp_ffn(tpc4p, x, ns, wu4, wg4, wd4, "silu")
+        check(f"sp_ffn.planned_chunks.{mode}",
+              float(jnp.abs(gotp - hand_fused_ffn(mode)).max()), 1e-5)
+
+    from repro.models.attention import attention_core
+    from repro.models.layers import apply_rope
+
+    cfg_at = get_arch("deepseek-7b").smoke().scaled(
+        num_layers=1, d_model=d, num_heads=4, num_kv_heads=4, head_dim=8,
+        d_ff=d_ff)
+    kat = jax.random.split(jax.random.key(21), 4)
+    wq4, wk4, wv4, wo4 = (jax.random.normal(k, (d, d)) * 0.1 for k in kat)
+    H, dh = cfg_at.num_heads, cfg_at.resolved_head_dim
+
+    def hand_fused_attn(mode):
+        """The pre-refactor sp_attention local body (tp.py@636bb1c),
+        dense-heads case (kv sharded)."""
+        def local(x, ns, wq, wk, wv, wo):
+            xn = apply_norm("rmsnorm", {"scale": ns}, x)
+            if mode == "barrier":
+                q = prim.barrier_ag_gemm(xn, wq, "model")
+                k = prim.barrier_ag_gemm(xn, wk, "model")
+                v = prim.barrier_ag_gemm(xn, wv, "model")
+            else:
+                q, k, v = prim.ag_gemm_multi(xn, (wq, wk, wv), "model", cais4)
+            B_, S = q.shape[0], q.shape[1]
+            H_loc = H // 4
+            pos = jnp.broadcast_to(jnp.arange(S), (B_, S))
+            q = apply_rope(q.reshape(B_, S, H_loc, dh), pos,
+                           cfg_at.rope_theta)
+            k = apply_rope(k.reshape(B_, S, H_loc, dh), pos,
+                           cfg_at.rope_theta)
+            v = v.reshape(B_, S, H_loc, dh)
+            o = attention_core(q, k, v, q_positions=pos, kv_positions=pos,
+                               causal=True)
+            o = o.reshape(B_, S, H_loc * dh)
+            if mode == "barrier":
+                return prim.barrier_gemm_rs(o, wo, "model")
+            return prim.gemm_rs(o, wo, "model", cais4)
+        return jax.jit(sharding.shard_map(
+            local, mesh=mesh4,
+            in_specs=(P(None, "model", None), P(None,), P(None, "model"),
+                      P(None, "model"), P(None, "model"), P("model", None)),
+            out_specs=P(None, "model", None), check_vma=False))(
+                x, ns, wq4, wk4, wv4, wo4)
+
+    for mode in ("barrier", "cais"):
+        tpc4 = tp_mod.TPContext(mesh=mesh4, backend=mode, cais=cais4)
+        got = tp_mod.sp_attention(tpc4, x, ns, wq4, wk4, wv4, wo4, cfg_at)
+        check(f"sp_attention.graph_vs_handfused.{mode}",
+              float(jnp.abs(got - hand_fused_attn(mode)).max()), 1e-5)
+
+    # replicated-KV (GQA, Hkv < tp): K/V weights replicate and the custom
+    # core slices per-device heads via axis_index — pin against a mesh-free
+    # dense reference (attention_core handles grouped heads natively)
+    cfg_gqa = cfg_at.scaled(num_kv_heads=2)
+    kkv = jax.random.split(jax.random.key(22), 2)
+    wk2 = jax.random.normal(kkv[0], (d, 2 * dh)) * 0.1
+    wv2 = jax.random.normal(kkv[1], (d, 2 * dh)) * 0.1
+    xn_full = apply_norm("rmsnorm", {"scale": ns}, x)
+    pos_full = jnp.broadcast_to(jnp.arange(x.shape[1]),
+                                (x.shape[0], x.shape[1]))
+    q_ref = apply_rope((xn_full @ wq4).reshape(x.shape[0], x.shape[1], H, dh),
+                       pos_full, cfg_gqa.rope_theta)
+    k_ref = apply_rope((xn_full @ wk2).reshape(x.shape[0], x.shape[1], 2, dh),
+                       pos_full, cfg_gqa.rope_theta)
+    v_ref = (xn_full @ wv2).reshape(x.shape[0], x.shape[1], 2, dh)
+    o_ref = attention_core(q_ref, k_ref, v_ref, q_positions=pos_full,
+                           kv_positions=pos_full, causal=True)
+    gqa_ref = o_ref.reshape(x.shape[0], x.shape[1], H * dh) @ wo4
+    for mode in ("barrier", "cais"):
+        tpc4 = tp_mod.TPContext(mesh=mesh4, backend=mode, cais=cais4)
+        got = tp_mod.sp_attention(tpc4, x, ns, wq4, wk2, wv2, wo4, cfg_gqa)
+        check(f"sp_attention.gqa_replicated_kv.{mode}",
+              float(jnp.abs(got - gqa_ref).max()), 1e-5)
 
     # ---------------- full model: auto == barrier == cais ----------------
-    mesh2 = jax.make_mesh((2, 4), ("data", "model"), axis_types=ax * 2)
+    mesh2 = sharding.make_mesh((2, 4), ("data", "model"))
     cfg = get_arch("deepseek-7b").smoke().scaled(
         num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
         d_ff=128)
@@ -176,7 +295,7 @@ def main():
                 return prim.barrier_a2a_expert_ffn(s, ffn, "model")[None]
             return prim.a2a_expert_ffn(
                 s, ffn, "model", CAISConfig(bidirectional=bidir))[None]
-        return jax.jit(jax.shard_map(
+        return jax.jit(sharding.shard_map(
             local, mesh=mesh, in_specs=(P("model"), P("model"), P("model")),
             out_specs=P("model"), check_vma=False))(send8, wu8, wd8)
 
@@ -239,8 +358,8 @@ def main():
                 state, met = step_e(state, make_batch(cfg_e, shp, s))
         return state, float(met["loss"])
 
-    mesh_a = jax.make_mesh((2, 4), ("data", "model"), axis_types=ax * 2)
-    mesh_b = jax.make_mesh((4, 2), ("data", "model"), axis_types=ax * 2)
+    mesh_a = sharding.make_mesh((2, 4), ("data", "model"))
+    mesh_b = sharding.make_mesh((4, 2), ("data", "model"))
 
     st = init_state(model_e, opt_e, jax.random.key(0))
     st_ref = jax.tree.map(jnp.copy, st)
@@ -261,7 +380,7 @@ def main():
     # ---------------- int8 gradient compression (error feedback) ----------
     from repro.optim.compression import compressed_psum, init_error_feedback
 
-    mesh_dp = jax.make_mesh((8,), ("data",), axis_types=ax)
+    mesh_dp = sharding.make_mesh((8,), ("data",))
     gkey = jax.random.key(11)
     local_grads = jax.random.normal(gkey, (8, 64)) * jnp.linspace(
         0.1, 3.0, 8)[:, None]   # heterogeneous per-device grads
@@ -272,7 +391,7 @@ def main():
 
     ef0 = jnp.zeros((1, 64))
 
-    red, ef = jax.jit(jax.shard_map(
+    red, ef = jax.jit(sharding.shard_map(
         dp_reduce, mesh=mesh_dp,
         in_specs=(P("data", None), P("data", None)),
         out_specs=(P("data", None), P("data", None)),
@@ -288,7 +407,7 @@ def main():
     acc = jnp.zeros((64,))
     ef_state = jnp.zeros_like(local_grads)
     for _ in range(16):
-        red, new_ef = jax.jit(jax.shard_map(
+        red, new_ef = jax.jit(sharding.shard_map(
             dp_reduce, mesh=mesh_dp,
             in_specs=(P("data", None), P("data", None)),
             out_specs=(P("data", None), P("data", None)),

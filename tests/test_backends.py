@@ -1,0 +1,187 @@
+"""CollectiveBackend registry + IR-driven sub-layer tests (single device;
+the multi-device parity checks live in multidev_checks.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sharding
+from repro.core import backends as be
+from repro.core import dataflow as df
+from repro.core import tp
+from repro.core.primitives import CAISConfig
+from repro.models.layers import activation, apply_norm
+from repro.runtime import Runtime
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_builtin_backends_registered():
+    assert {"auto", "barrier", "cais"} <= set(be.available_backends())
+    assert be.get_backend("cais").name == "cais"
+    assert be.get_backend("barrier").explicit
+    assert not be.get_backend("auto").explicit
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(ValueError, match="unknown collective backend"):
+        be.get_backend("no-such-backend")
+
+
+def test_get_backend_passes_instances_through():
+    inst = be.get_backend("barrier")
+    assert be.get_backend(inst) is inst
+
+
+def test_registry_roundtrip():
+    class MyBackend(be.BarrierBackend):
+        name = "test-custom"
+
+    inst = MyBackend()
+    try:
+        be.register_backend(inst)
+        assert be.get_backend("test-custom") is inst
+        assert "test-custom" in be.available_backends()
+        # registered backends are full TPContext citizens
+        mesh = sharding.make_mesh((1, 1), ("data", "model"))
+        tpc = tp.TPContext(mesh=mesh, backend="test-custom")
+        assert tpc.backend is inst
+        assert tpc.mode == "test-custom"
+    finally:
+        be.unregister_backend("test-custom")
+    with pytest.raises(ValueError):
+        be.get_backend("test-custom")
+
+
+def test_register_rejects_anonymous():
+    with pytest.raises(ValueError):
+        be.register_backend(be.CollectiveBackend())
+
+
+def test_engine_rejects_unknown_tp_mode():
+    from repro.serve.engine import Engine
+
+    with pytest.raises(ValueError, match="unknown collective backend"):
+        Engine(model=None, params=None, cfg=None,
+               rt=Runtime(tp_mode="bogus"))
+
+
+# ---------------------------------------------------------------------------
+# compute-aware chunk planning (cais backend)
+# ---------------------------------------------------------------------------
+
+
+def test_cais_backend_plans_chunks():
+    cais_be = be.get_backend("cais")
+    # big payload on a big ring: planner picks finer chunking than tiny one
+    big = cais_be.plan_chunks(512 * 1024 * 1024, ring=16)
+    small = cais_be.plan_chunks(64 * 1024, ring=16)
+    assert big >= small >= 1
+    # staging budget respected: chunk bytes fit the default 4 MiB budget
+    from repro.core import coordination
+    p = coordination.plan(512 * 1024 * 1024, 16)
+    assert p.staging_bytes <= 4 * 1024 ** 2
+
+
+def test_cais_resolve_honors_static_override():
+    cais_be = be.get_backend("cais")
+    pinned = CAISConfig(num_chunks=3)
+    assert cais_be._resolve(pinned, 1 << 30, 8) is pinned
+    auto = CAISConfig()                     # num_chunks=None
+    resolved = cais_be._resolve(auto, 1 << 30, 8)
+    assert resolved.num_chunks is not None and resolved.num_chunks >= 1
+
+
+# ---------------------------------------------------------------------------
+# dataflow optimizer: shared-gather fusion + reaches
+# ---------------------------------------------------------------------------
+
+
+def test_ffn_graph_fuses_to_backend_ops():
+    g = df.optimize(tp.ffn_sublayer_graph(True, "silu"))
+    ops = [n.op for n in g.nodes if n.op != "input"]
+    assert ops == ["layernorm", "ag_gemm_multi", "custom", "gemm_rs"]
+    g2 = df.optimize(tp.ffn_sublayer_graph(False, "gelu"))
+    ops2 = [n.op for n in g2.nodes if n.op != "input"]
+    assert ops2 == ["layernorm", "ag_gemm", "custom", "gemm_rs"]
+
+
+def test_attention_graph_shares_one_gather():
+    g = df.optimize(tp.attention_sublayer_graph(lambda q, k, v: q))
+    multi = [n for n in g.nodes if n.op == "ag_gemm_multi"]
+    assert len(multi) == 1
+    assert multi[0].weights == ("wq", "wk", "wv")
+    assert multi[0].outputs == ("q", "k", "v")
+    assert not any(n.op == "allgather" for n in g.nodes)
+
+
+def test_shared_gather_not_fused_when_escaping():
+    """A gather whose value is itself a graph output must stay unfused."""
+    nodes = [
+        df.Node("x", "input"),
+        df.Node("agx", "allgather", ("x",)),
+        df.Node("a", "gemm_col", ("agx",), ("wa",)),
+        df.Node("b", "gemm_col", ("agx",), ("wb",)),
+    ]
+    g = df.optimize(df.Graph(nodes, outputs=("a", "b", "agx")))
+    assert any(n.op == "allgather" for n in g.nodes)
+
+
+def test_reaches_adjacency():
+    g = df.sublayer_graph()
+    assert g.reaches("x", "g2")
+    assert g.reaches("g1", "ag")
+    assert not g.reaches("g2", "x")
+    assert not g.reaches("ln", "g1")
+
+
+# ---------------------------------------------------------------------------
+# graph-routed sub-layers: parity vs hand-fused math (tp=1 mesh)
+# ---------------------------------------------------------------------------
+
+
+def _ffn_ref(x, ns, wu, wg, wd, act):
+    xn = apply_norm("rmsnorm", {"scale": ns}, x)
+    if wg is not None:
+        return (activation(act, xn @ wg) * (xn @ wu)) @ wd
+    return activation(act, xn @ wu) @ wd
+
+
+@pytest.mark.parametrize("backend", ["barrier", "cais"])
+@pytest.mark.parametrize("gated", [True, False])
+def test_sp_ffn_graph_parity_single_device(backend, gated):
+    mesh = sharding.make_mesh((1, 1), ("data", "model"))
+    B, S, d, F = 2, 8, 16, 32
+    ks = jax.random.split(jax.random.key(0), 5)
+    x = jax.random.normal(ks[0], (B, S, d))
+    ns = jax.random.normal(ks[1], (d,)) * 0.1 + 1.0
+    wu = jax.random.normal(ks[2], (d, F)) * 0.1
+    wg = jax.random.normal(ks[3], (d, F)) * 0.1 if gated else None
+    wd = jax.random.normal(ks[4], (F, d)) * 0.1
+    tpc = tp.TPContext(mesh=mesh, backend=backend)
+    out = tp.sp_ffn(tpc, x, ns, wu, wg, wd, "silu")
+    ref = _ffn_ref(x, ns, wu, wg, wd, "silu")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["barrier", "cais"])
+def test_sp_attention_graph_parity_single_device(backend):
+    from repro.configs import get_arch
+
+    cfg = get_arch("deepseek-7b").smoke().scaled(
+        num_layers=1, d_model=32, num_heads=4, num_kv_heads=4, head_dim=8,
+        d_ff=64)
+    mesh = sharding.make_mesh((1, 1), ("data", "model"))
+    B, S, d = 2, 8, 32
+    ks = jax.random.split(jax.random.key(1), 6)
+    x = jax.random.normal(ks[0], (B, S, d))
+    ns = jnp.ones((d,))
+    wq, wk, wv, wo = (jax.random.normal(k, (d, d)) * 0.1 for k in ks[1:5])
+    outs = {}
+    for name in ("barrier", backend):
+        tpc = tp.TPContext(mesh=mesh, backend=name)
+        outs[name] = tp.sp_attention(tpc, x, ns, wq, wk, wv, wo, cfg)
+    np.testing.assert_allclose(np.asarray(outs[backend]),
+                               np.asarray(outs["barrier"]), atol=1e-5)
