@@ -1,13 +1,41 @@
-"""Shared benchmark helpers: CSV row emission + wall-clock timing."""
+"""Shared benchmark helpers: CSV row emission + wall-clock timing.
+
+Rows printed via :func:`emit` are also collected in memory; a bench that
+wants a machine-readable artifact (CI bench-smoke) calls
+:func:`dump_rows_json`, which writes them to ``$REPRO_BENCH_JSON`` (or an
+explicit path) as a JSON list of ``{name, us_per_call, derived}``.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable
+from typing import Callable, Optional
+
+_ROWS: list = []
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    """One CSV row: ``name,us_per_call,derived``."""
+    """One CSV row: ``name,us_per_call,derived`` (also collected for JSON)."""
     print(f"{name},{us_per_call:.3f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": round(us_per_call, 3),
+                  "derived": derived})
+
+
+def dump_rows_json(path: Optional[str] = None) -> Optional[str]:
+    """Write every row emitted so far to ``path`` (default:
+    ``$REPRO_BENCH_JSON``); no-op when neither is set. Returns the path."""
+    path = path or os.environ.get("REPRO_BENCH_JSON")
+    if not path:
+        return None
+    with open(path, "w") as fh:
+        json.dump(_ROWS, fh, indent=1)
+    return path
+
+
+def bench_tiny() -> bool:
+    """CI bench-smoke mode: shrink shapes so the cell finishes in seconds."""
+    return bool(os.environ.get("REPRO_BENCH_TINY"))
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:

@@ -17,14 +17,16 @@ def _child() -> None:
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
 
-    from benchmarks.common import emit, time_fn
+    from benchmarks.common import bench_tiny, dump_rows_json, emit, time_fn
     from repro import sharding
     from repro.core import primitives as prim
     from repro.core.backends import CAISBackend, get_backend
     from repro.core.primitives import CAISConfig
 
     mesh = sharding.make_mesh((8,), ("model",))
-    B, S, d, F = 4, 2048, 512, 512
+    # REPRO_BENCH_TINY: CI smoke shapes — structure (HLO census) is
+    # identical, only the timings shrink to seconds
+    B, S, d, F = (2, 256, 128, 128) if bench_tiny() else (4, 2048, 512, 512)
     x = jax.random.normal(jax.random.key(0), (B, S, d), jnp.bfloat16)
     w = jax.random.normal(jax.random.key(1), (d, F), jnp.bfloat16)
 
@@ -84,6 +86,8 @@ def _child() -> None:
         extra = f"num_chunks={planned_c} (auto)" if name == "planned" \
             else f"num_chunks={cfg_c.num_chunks}"
         emit(f"prim.ag_gemm.chunks.{name}", us, extra)
+
+    dump_rows_json()   # CI bench-smoke artifact ($REPRO_BENCH_JSON)
 
 
 def run() -> None:

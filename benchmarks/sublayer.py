@@ -1,11 +1,79 @@
-"""Paper Fig. 12 — sub-layer (L1–L4) speedups of CAIS over each baseline."""
+"""Paper Fig. 12 — sub-layer (L1–L4) speedups of CAIS over each baseline,
+plus a measured fused-block-vs-split cell: the whole-block dataflow graph
+(``sp_block``, one shard_map, pass-2 seam fusion) against the PR-1
+per-sub-layer composition (``sp_attention`` + ``sp_ffn``), wall-clock on an
+8-virtual-device ring (subprocess — the parent keeps one device)."""
 from __future__ import annotations
+
+import os
+import subprocess
+import sys
 
 from benchmarks.common import emit
 from repro.core import perfsim as ps
 
+_CHILD = "_REPRO_SUBLAYER_BLOCK_CHILD"
+
+
+def _block_child() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    import repro.models.transformer as tr
+    from benchmarks.common import bench_tiny, time_fn
+    from repro import sharding
+    from repro.configs import get_arch
+    from repro.core import tp as tp_mod
+    from repro.core.primitives import CAISConfig
+
+    mesh = sharding.make_mesh((1, 8), ("data", "model"))
+    S, d, d_ff = (256, 128, 256) if bench_tiny() else (1024, 256, 512)
+    cfg = get_arch("deepseek-7b").smoke().scaled(
+        num_layers=1, d_model=d, num_heads=8, num_kv_heads=8,
+        head_dim=d // 8, d_ff=d_ff)
+    params = tr.init_block(jax.random.key(0), "attn", cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, S, d), jnp.float32)
+
+    for mode in ("barrier", "cais"):
+        tpc = tp_mod.TPContext(mesh=mesh, backend=mode,
+                               cais=CAISConfig(num_chunks=2))
+
+        fused = jax.jit(
+            lambda x, tpc=tpc: tp_mod.sp_block(tpc, x, params, cfg,
+                                               "attn")[0])
+
+        def split(x, tpc=tpc):
+            p, m, f = params, params["mixer"], params["ffn"]
+            r1 = x + tp_mod.sp_attention(
+                tpc, x, p["norm1"]["scale"], m["wq"], m["wk"], m["wv"],
+                m["wo"], cfg)
+            return r1 + tp_mod.sp_ffn(
+                tpc, r1, p["norm2"]["scale"], f["w_up"], f.get("w_gate"),
+                f["w_down"], cfg.act)
+
+        t_fused = time_fn(fused, x)
+        t_split = time_fn(jax.jit(split), x)
+        emit(f"block.fused_vs_split.{mode}", t_fused,
+             f"split_us={t_split:.0f} speedup={t_split / t_fused:.2f}x")
+
 
 def run() -> None:
+    if os.environ.get(_CHILD):
+        _block_child()
+        return
+    # measured cell first (subprocess owns the 8-device override)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env[_CHILD] = "1"
+    env.setdefault("PYTHONPATH", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", "from benchmarks.sublayer import run; run()"],
+        capture_output=True, text=True, env=env, timeout=1200)
+    sys.stdout.write(out.stdout)
+    if out.returncode != 0:
+        sys.stderr.write(out.stderr[-2000:])
+        raise RuntimeError("fused-block bench failed")
+
     f = ps.calibrated_fabric()
     for cfg in ps.PAPER_MODELS:
         for which in ("L1", "L2", "L3", "L4"):

@@ -102,13 +102,36 @@ class CollectiveBackend:
     # -- fused sub-layer chain -------------------------------------------
     def fused_rs_ln_ag(self, x, w1, ln_scale, w2, axis: str, cais: CAISConfig,
                        norm: str = "rmsnorm", residual=None):
-        """GEMM-RS -> (+res) -> LN -> AG-GEMM. Returns (out, z)."""
-        raise NotImplementedError
+        """GEMM-RS -> (+res) -> LN -> AG-GEMM. Returns (out, z). Default:
+        composed from the backend's own ``gemm_rs`` / ``ag_gemm``, so custom
+        backends get the fused seam for free (non-gated blocks fuse to this
+        single-weight form)."""
+        outs, z = self.fused_rs_ln_ag_multi(x, w1, ln_scale, (w2,), axis,
+                                            cais, norm=norm,
+                                            residual=residual)
+        return outs[0], z
+
+    def fused_rs_ln_ag_multi(self, x, w1, ln_scale, ws2: Sequence, axis: str,
+                             cais: CAISConfig, norm: str = "rmsnorm",
+                             residual=None):
+        """GEMM-RS -> (+res) -> LN -> shared-gather AG-GEMM against several
+        weights (the whole-block attention-out → gated-FFN-in seam).
+        Returns (per-weight outputs tuple, z). Default: composed from the
+        backend's own ``gemm_rs`` / ``ag_gemm_multi``, so custom backends
+        get the fused seam for free."""
+        from repro.models.layers import apply_norm
+
+        z = self.gemm_rs(x, w1, axis, cais)
+        if residual is not None:
+            z = z + residual
+        zn = apply_norm(norm, {"scale": ln_scale}, z)
+        return self.ag_gemm_multi(zn, tuple(ws2), axis, cais), z
 
     # -- asymmetric dual-stream overlap ----------------------------------
     def overlap_asymmetric(self, rs_args, ag_args, axis: str,
                            cais: CAISConfig):
-        """Independent GEMM-RS + AG-GEMM pair. Returns (rs_out, ag_out)."""
+        """Independent GEMM-RS + AG-GEMM pair; the AG side's weight may be a
+        tuple (paired ``ag_gemm_multi``). Returns (rs_out, ag_out[s])."""
         raise NotImplementedError
 
 
@@ -135,21 +158,13 @@ class BarrierBackend(CollectiveBackend):
     def a2a_expert_ffn(self, send, ffn, axis, cais):
         return prim.barrier_a2a_expert_ffn(send, ffn, axis)
 
-    def fused_rs_ln_ag(self, x, w1, ln_scale, w2, axis, cais,
-                       norm="rmsnorm", residual=None):
-        from repro.models.layers import apply_norm
-
-        z = prim.barrier_gemm_rs(x, w1, axis)
-        if residual is not None:
-            z = z + residual
-        zn = apply_norm(norm, {"scale": ln_scale}, z)
-        return prim.barrier_ag_gemm(zn, w2, axis), z
-
     def overlap_asymmetric(self, rs_args, ag_args, axis, cais):
         x_rs, w_rs = rs_args
         x_ag, w_ag = ag_args
-        return (prim.barrier_gemm_rs(x_rs, w_rs, axis),
-                prim.barrier_ag_gemm(x_ag, w_ag, axis))
+        rs_out = prim.barrier_gemm_rs(x_rs, w_rs, axis)
+        if isinstance(w_ag, (tuple, list)):
+            return rs_out, self.ag_gemm_multi(x_ag, tuple(w_ag), axis, cais)
+        return rs_out, prim.barrier_ag_gemm(x_ag, w_ag, axis)
 
 
 # ---------------------------------------------------------------------------
@@ -220,6 +235,20 @@ class CAISBackend(CollectiveBackend):
         cais = self._resolve(cais, z_bytes, n)
         return prim.fused_rs_ln_ag(x, w1, ln_scale, w2, axis, cais,
                                    norm=norm, residual=residual)
+
+    def fused_rs_ln_ag_multi(self, x, w1, ln_scale, ws2, axis, cais,
+                             norm="rmsnorm", residual=None):
+        # same planning as fused_rs_ln_ag — the gathered z payload governs
+        # both legs; with num_chunks resolved, the base-class composition
+        # over this backend's gemm_rs / ag_gemm_multi is the schedule
+        n = self._ring(axis, cais)
+        itemsize = np.dtype(x.dtype).itemsize
+        z_bytes = int(x.shape[0]) * int(x.shape[1]) * int(w1.shape[1]) * \
+            itemsize
+        cais = self._resolve(cais, z_bytes, n)
+        return super().fused_rs_ln_ag_multi(x, w1, ln_scale, tuple(ws2),
+                                            axis, cais, norm=norm,
+                                            residual=residual)
 
     def overlap_asymmetric(self, rs_args, ag_args, axis, cais):
         # no _resolve: the lockstep schedule moves one S_loc slice per hop

@@ -1,25 +1,68 @@
 """Graph-level dataflow optimizer (paper §III-C).
 
-A small dataflow IR over TP sub-layer chains plus a fusion pass that:
+A small dataflow IR over whole TP transformer blocks plus fusion passes.
 
-  1. fuses ``gemm_row → reduce_scatter``  into push-aligned ``gemm_rs``
-     and ``allgather → gemm_col``         into pull-aligned ``ag_gemm``
-     (the compute-aware ISA alignment, §III-A);
-  2. fuses ``gemm_rs → [add] → layernorm → ag_gemm`` chains into one
-     ``fused_rs_ln_ag`` pipeline (deep kernel fusion, Fig. 9);
-  3. pairs *independent* ``gemm_rs`` / ``ag_gemm`` nodes into an
-     ``overlap_asym`` dual-stream op with complementary link directions
-     (asymmetric kernel overlapping, Fig. 9e/10);
-  4. merges an ``allgather`` feeding several ``gemm_col`` nodes into one
-     ``ag_gemm_multi`` (QKV / gate+up share a single ring circulation).
+Op vocabulary (and which optimizer pass consumes each op)
+---------------------------------------------------------
+
+Primitive ops (emitted by the graph builders in :mod:`repro.core.tp`):
+
+``input``
+    Declares a graph value. Consumed by no pass.
+``gemm_col`` / ``gemm_row``
+    Column-/row-sharded projection. Pass 1 (``fuse_compute_aware``) aligns
+    the adjacent collective with the GEMM's memory semantics; pass 1b
+    (``fuse_shared_gather``) merges several ``gemm_col`` consumers of one
+    gather into ``ag_gemm_multi``.
+``allgather`` / ``reduce_scatter`` / ``allreduce``
+    The raw collectives. Consumed by pass 1/1b into the fused forms below.
+``layernorm``
+    Sequence-parallel norm (no collective). Consumed by pass 2
+    (``fuse_sublayer_chain``) when it sits on an rs→ln→ag seam.
+``add`` / ``residual``
+    Elementwise sum; ``residual`` marks the block's residual connection
+    (main branch first, skip second). Pass 2 folds either into the fused
+    chain and re-exposes the post-add value.
+``custom``
+    Arbitrary *local* math (activation, attention core, dense-residual MLP)
+    — it never touches the mesh, so every pass may move collectives
+    around it. ``fn(*inputs, *weights)``.
+``route`` / ``unroute``
+    Top-k expert routing: ``route`` turns a normed activation into the
+    per-owner send buffer (+ combine weights + aux loss), ``unroute``
+    scatters expert outputs back to token order. Local math like
+    ``custom`` (multi-output capable); no pass rewrites them today — they
+    exist as named ops so future passes can schedule the expert all-to-all
+    against the dense residual.
+``a2a_ffn``
+    Expert all-to-all + expert FFN, dispatched through
+    ``CollectiveBackend.a2a_expert_ffn`` (the ``cais`` backend overlaps
+    ±direction dispatch/combine permutes with the expert GEMMs).
+
+Fused ops (produced by ``optimize``, executed via the backend):
+
+``ag_gemm`` / ``ag_gemm_multi``
+    Pull-aligned AllGather→GEMM (one or several weights sharing one ring
+    circulation). Produced by pass 1 / 1b; pass 2 and 3 consume them.
+``gemm_rs`` / ``gemm_ar``
+    Push-aligned GEMM→ReduceScatter / →AllReduce. Produced by pass 1;
+    pass 2 and 3 consume ``gemm_rs``.
+``fused_rs_ln_ag`` / ``fused_rs_ln_ag_multi``
+    Deep fusion of the ``gemm_rs → [add|residual] → layernorm →
+    ag_gemm[_multi]`` sub-layer seam (Fig. 9) — the whole-block graph's
+    attention-out → FFN-in chain. Produced by pass 2 (terminal).
+``overlap_asym``
+    Co-scheduled independent ``gemm_rs`` + ``ag_gemm[_multi]`` pair with
+    complementary ring directions (asymmetric kernel overlapping,
+    Fig. 9e/10). Produced by pass 3 (``pair_asymmetric``, terminal).
 
 The executor runs a graph either as pure math (no mesh; reference) or inside
 ``shard_map`` (explicit TP), dispatching every fused collective op through a
-:class:`repro.core.backends.CollectiveBackend` — the model sub-layers
-(``repro.core.tp.sp_ffn`` / ``sp_attention``) are built, optimized, and run
-through this IR. Tensor layout conventions per value:
-``seq`` (B, S_loc, d) sequence-sharded · ``feat`` (B, S, d_loc)
-feature-sharded · ``full`` (B, S, d) replicated.
+:class:`repro.core.backends.CollectiveBackend` — the model blocks
+(``repro.core.tp.sp_block`` and the per-sub-layer ``sp_ffn`` /
+``sp_attention``) are built, optimized, and run through this IR. Tensor
+layout conventions per value: ``seq`` (B, S_loc, d) sequence-sharded ·
+``feat`` (B, S, d_loc) feature-sharded · ``full`` (B, S, d) replicated.
 """
 from __future__ import annotations
 
@@ -44,24 +87,37 @@ from repro.core.primitives import CAISConfig
 # reduce_scatter       (x: partial-full)     —               seq
 # allreduce            (x: partial-full)     —               full
 # layernorm            (x: any)              scale (d,)      same
-# add                  (a, b) same layout    —               same
-# custom               (any...)              —               fn-defined
-#   `fn` applies arbitrary *local* math (activation, attention core) — it
-#   never touches the mesh, so fusion passes may move collectives around it
+# add / residual       (a, b) same layout    —               same
+# custom               (any...)              (w...)          fn-defined
+# route                (xn: seq)             (router,)       (send, combine,
+#                                                             aux)
+# unroute              (eout, combine, xn)   —               seq
+# a2a_ffn              (send,)               (expert ws...)  send-shaped
 # --- fused (produced by optimize) ---
 # ag_gemm              (x: seq)              w               feat
 # ag_gemm_multi        (x: seq)              (w...)          feat per weight
 # gemm_rs              (x: feat)             w               seq
 # gemm_ar              (x: feat)             w               full
 # fused_rs_ln_ag       (x: feat[, res:seq])  (w1, scale, w2) feat (+ seq z)
-# overlap_asym         (x_rs: feat, x_ag: seq) (w_rs, w_ag)  (seq, feat)
+# fused_rs_ln_ag_multi (x: feat[, res:seq])  (w1, scale, w...) feat per w
+#                                                             (+ seq z)
+# overlap_asym         (x_rs: feat, x_ag: seq) (w_rs, w_ag...) (seq, feat...)
 
 VALID_OPS = {
     "input", "gemm_col", "gemm_row", "allgather", "reduce_scatter",
-    "allreduce", "layernorm", "add", "custom",
+    "allreduce", "layernorm", "add", "residual", "custom",
+    "route", "unroute", "a2a_ffn",
     "ag_gemm", "ag_gemm_multi", "gemm_rs", "gemm_ar", "fused_rs_ln_ag",
-    "overlap_asym",
+    "fused_rs_ln_ag_multi", "overlap_asym",
 }
+
+# local-math ops whose semantics live in the node's `fn`
+_FN_OPS = ("custom", "route", "unroute")
+
+
+class GraphError(ValueError):
+    """A malformed dataflow graph: unknown op, cycle, missing producer…
+    Always names the offending node/value."""
 
 
 @dataclass(frozen=True)
@@ -71,10 +127,13 @@ class Node:
     inputs: Tuple[str, ...] = ()
     weights: Tuple[str, ...] = ()   # keys into the weights dict
     outputs: Tuple[str, ...] = ()   # multi-output fused ops; default (name,)
-    fn: Optional[Callable] = None   # local math for op == "custom"
+    fn: Optional[Callable] = None   # local math for fn-carrying ops
 
     def __post_init__(self):
-        assert self.op in VALID_OPS, self.op
+        if self.op not in VALID_OPS:
+            raise GraphError(
+                f"node {self.name!r} has unknown dataflow op {self.op!r}; "
+                f"valid ops: {sorted(VALID_OPS)}")
         if not self.outputs:
             object.__setattr__(self, "outputs", (self.name,))
 
@@ -83,24 +142,37 @@ class Node:
 class Graph:
     nodes: List[Node]
     outputs: Tuple[str, ...]
+    # lazily-built adjacency index shared by node_producing / consumers /
+    # reaches. Passes never mutate a Graph in place (every rewrite builds a
+    # fresh Graph), so the cache stays valid for the instance's lifetime.
+    _idx: Optional[Tuple[Dict[str, Node], Dict[str, List[Node]],
+                         Dict[str, Node]]] = field(
+        default=None, init=False, repr=False, compare=False)
+
+    def _index(self):
+        if self._idx is None:
+            producer: Dict[str, Node] = {}
+            consumers: Dict[str, List[Node]] = {}
+            by_name: Dict[str, Node] = {}
+            for n in self.nodes:
+                by_name[n.name] = n
+                for v in n.outputs:
+                    producer[v] = n
+                for v in n.inputs:
+                    consumers.setdefault(v, []).append(n)
+            self._idx = (producer, consumers, by_name)
+        return self._idx
 
     def node_producing(self, value: str) -> Optional[Node]:
-        for n in self.nodes:
-            if value in n.outputs:
-                return n
-        return None
+        return self._index()[0].get(value)
 
     def consumers(self, value: str) -> List[Node]:
-        return [n for n in self.nodes if value in n.inputs]
+        return list(self._index()[1].get(value, ()))
 
     def reaches(self, src: str, dst: str) -> bool:
         """Is there a dependency path from node `src` to node `dst`?
-        O(V+E) per query: one adjacency build, one traversal."""
-        by_name = {n.name: n for n in self.nodes}
-        consumers_of: Dict[str, List[str]] = {}
-        for n in self.nodes:
-            for v in n.inputs:
-                consumers_of.setdefault(v, []).append(n.name)
+        O(V+E) per query over the shared adjacency index."""
+        _, consumers_of, by_name = self._index()
         seen, stack = set(), [src]
         while stack:
             cur = stack.pop()
@@ -110,8 +182,14 @@ class Graph:
                 continue
             seen.add(cur)
             for v in by_name[cur].outputs:
-                stack.extend(consumers_of.get(v, ()))
+                stack.extend(c.name for c in consumers_of.get(v, ()))
         return False
+
+    def validate(self) -> "Graph":
+        """Raise :class:`GraphError` (naming the offender) on missing
+        producers, duplicate producers, unknown graph outputs, or cycles."""
+        _topo(self.nodes, self.outputs)
+        return self
 
 
 # ---------------------------------------------------------------------------
@@ -184,7 +262,10 @@ def fuse_shared_gather(g: Graph) -> Graph:
 
 
 def fuse_sublayer_chain(g: Graph) -> Graph:
-    """Pass 2: gemm_rs → [add residual] → layernorm → ag_gemm ⇒ one pipeline."""
+    """Pass 2: gemm_rs → [add|residual] → layernorm → ag_gemm[_multi] ⇒ one
+    pipeline. The post-add value may have *several* consumers (in a
+    whole-block graph it feeds both the next LN and the next residual add):
+    the fused op re-exposes it, so only the layernorm leg is swallowed."""
     nodes = list(g.nodes)
     for rs in list(nodes):
         if rs.op != "gemm_rs":
@@ -193,21 +274,35 @@ def fuse_sublayer_chain(g: Graph) -> Graph:
         nxt = _single_consumer(g, rs.name, allow_output=True)
         residual = None
         add_node = None
-        if nxt is not None and nxt.op == "add":
+        if nxt is not None and nxt.op in ("add", "residual"):
+            if rs.name in g.outputs:
+                # the fused op re-exposes only the post-add z — a graph that
+                # also exports the pre-add value must keep the chain unfused
+                continue
             other = [v for v in nxt.inputs if v != rs.name]
             residual = other[0] if other else None
             add_node = nxt
-            nxt = _single_consumer(g, nxt.name, allow_output=True)
+            # z = rs + residual is re-exposed by the fused op, so it may be a
+            # graph output or feed several consumers — fuse along the (one)
+            # layernorm among them
+            lns = [c for c in g.consumers(nxt.name) if c.op == "layernorm"]
+            nxt = lns[0] if len(lns) == 1 else None
         if nxt is None or nxt.op != "layernorm":
             continue
         ln = nxt
         ag = _single_consumer(g, ln.name)
-        if ag is None or ag.op != "ag_gemm":
+        if ag is None or ag.op not in ("ag_gemm", "ag_gemm_multi"):
             continue
         ins = rs.inputs + ((residual,) if residual else ())
-        fused = Node(ag.name, "fused_rs_ln_ag", ins,
-                     rs.weights + ln.weights + ag.weights,
-                     outputs=(ag.name, (add_node or rs).name))
+        z_name = (add_node or rs).name
+        if ag.op == "ag_gemm":
+            fused = Node(ag.name, "fused_rs_ln_ag", ins,
+                         rs.weights + ln.weights + ag.weights,
+                         outputs=(ag.name, z_name))
+        else:
+            fused = Node(ag.name, "fused_rs_ln_ag_multi", ins,
+                         rs.weights + ln.weights + ag.weights,
+                         outputs=ag.outputs + (z_name,))
         drop = {rs.name, ln.name, ag.name} | ({add_node.name} if add_node else set())
         nodes = [x for x in nodes if x.name not in drop] + [fused]
         return fuse_sublayer_chain(Graph(_topo(nodes, g.outputs), g.outputs))
@@ -215,20 +310,21 @@ def fuse_sublayer_chain(g: Graph) -> Graph:
 
 
 def pair_asymmetric(g: Graph) -> Graph:
-    """Pass 3: co-schedule an independent gemm_rs + ag_gemm pair so their
-    complementary ring directions share the links each step."""
+    """Pass 3: co-schedule an independent gemm_rs + ag_gemm[_multi] pair so
+    their complementary ring directions share the links each step (e.g. one
+    microbatch's FFN-out RS against another's attention-in gather)."""
     nodes = list(g.nodes)
     for a in nodes:
         if a.op != "gemm_rs":
             continue
         for b in nodes:
-            if b.op != "ag_gemm" or b.name == a.name:
+            if b.op not in ("ag_gemm", "ag_gemm_multi") or b.name == a.name:
                 continue
             if g.reaches(a.name, b.name) or g.reaches(b.name, a.name):
                 continue
             fused = Node(f"{a.name}+{b.name}", "overlap_asym",
                          a.inputs + b.inputs, a.weights + b.weights,
-                         outputs=(a.name, b.name))
+                         outputs=(a.name,) + b.outputs)
             nodes = [x for x in nodes if x.name not in (a.name, b.name)]
             nodes.append(fused)
             return pair_asymmetric(Graph(_topo(nodes, g.outputs), g.outputs))
@@ -245,22 +341,45 @@ def optimize(g: Graph, asymmetric: bool = True) -> Graph:
 
 
 def _topo(nodes: List[Node], outputs) -> List[Node]:
-    """Stable topological order by value availability."""
-    avail = set()
+    """Stable topological order by value availability.
+
+    Raises :class:`GraphError` naming the offending node/value on duplicate
+    producers, unknown graph outputs, inputs with no producer, or cycles."""
+    produced: Dict[str, str] = {}
     for n in nodes:
-        if n.op == "input":
-            avail |= set(n.outputs)
-    ordered, pending = [], [n for n in nodes if n.op != "input"]
+        for v in n.outputs:
+            if v in produced and produced[v] != n.name:
+                raise GraphError(
+                    f"value {v!r} is produced by both node {produced[v]!r} "
+                    f"and node {n.name!r}")
+            produced[v] = n.name
+    for o in outputs:
+        if o not in produced:
+            raise GraphError(
+                f"graph output {o!r} is not produced by any node")
+    avail = set()
     ordered = [n for n in nodes if n.op == "input"]
-    guard = 0
+    for n in ordered:
+        avail |= set(n.outputs)
+    pending = [n for n in nodes if n.op != "input"]
     while pending:
-        guard += 1
-        assert guard < 10_000, "cycle in dataflow graph"
-        for n in list(pending):
-            if all(v in avail for v in n.inputs):
-                ordered.append(n)
-                avail |= set(n.outputs)
-                pending.remove(n)
+        ready = [n for n in pending if all(v in avail for v in n.inputs)]
+        if not ready:
+            # stalled — diagnose: a consumed value nobody produces, or a cycle
+            for n in pending:
+                missing = [v for v in n.inputs if v not in produced]
+                if missing:
+                    raise GraphError(
+                        f"node {n.name!r} consumes value {missing[0]!r}, "
+                        f"which no node produces")
+            cyc = ", ".join(sorted(n.name for n in pending))
+            raise GraphError(
+                f"cycle in dataflow graph involving nodes: {cyc}")
+        ready_ids = {id(n) for n in ready}
+        for n in ready:
+            ordered.append(n)
+            avail |= set(n.outputs)
+        pending = [n for n in pending if id(n) not in ready_ids]
     return ordered
 
 
@@ -304,10 +423,19 @@ def execute(g: Graph, values: Dict[str, jnp.ndarray],
             env[n.name] = jax.lax.psum(ins[0], axis) if dist else ins[0]
         elif n.op == "layernorm":
             env[n.name] = apply_norm(norm, {"scale": ws[0]}, ins[0])
-        elif n.op == "add":
+        elif n.op in ("add", "residual"):
             env[n.name] = ins[0] + ins[1]
-        elif n.op == "custom":
-            env[n.name] = n.fn(*ins)
+        elif n.op in _FN_OPS:
+            res = n.fn(*ins, *ws)
+            if len(n.outputs) > 1:
+                for name, val in zip(n.outputs, res):
+                    env[name] = val
+            else:
+                env[n.name] = res
+        elif n.op == "a2a_ffn":
+            fn = (lambda chunk, _n=n, _ws=tuple(ws): _n.fn(chunk, *_ws))
+            env[n.name] = (be.a2a_expert_ffn(ins[0], fn, axis, cais)
+                           if dist else jax.vmap(fn)(ins[0]))
         elif n.op == "ag_gemm":
             env[n.name] = (be.ag_gemm(ins[0], ws[0], axis, cais)
                            if dist else ins[0] @ ws[0])
@@ -334,14 +462,36 @@ def execute(g: Graph, values: Dict[str, jnp.ndarray],
                     z = z + res
                 out = apply_norm(norm, {"scale": scale}, z) @ w2
             env[n.outputs[0]], env[n.outputs[1]] = out, z
+        elif n.op == "fused_rs_ln_ag_multi":
+            w1, scale = ws[0], ws[1]
+            ws2 = tuple(ws[2:])
+            res = env[n.inputs[1]] if len(n.inputs) > 1 else None
+            if dist:
+                outs, z = be.fused_rs_ln_ag_multi(ins[0], w1, scale, ws2,
+                                                  axis, cais, norm=norm,
+                                                  residual=res)
+            else:
+                z = ins[0] @ w1
+                if res is not None:
+                    z = z + res
+                zn = apply_norm(norm, {"scale": scale}, z)
+                outs = tuple(zn @ w for w in ws2)
+            for name, val in zip(n.outputs, outs + (z,)):
+                env[name] = val
         elif n.op == "overlap_asym":
-            w_rs, w_ag = ws
+            w_rs = ws[0]
+            ag_ws = tuple(ws[1:])
+            w_ag = ag_ws if len(ag_ws) > 1 else ag_ws[0]
             if dist:
                 rs_out, ag_out = be.overlap_asymmetric(
                     (ins[0], w_rs), (ins[1], w_ag), axis, cais)
             else:
-                rs_out, ag_out = ins[0] @ w_rs, ins[1] @ w_ag
-            env[n.outputs[0]], env[n.outputs[1]] = rs_out, ag_out
+                rs_out = ins[0] @ w_rs
+                ag_out = (tuple(ins[1] @ w for w in ag_ws)
+                          if len(ag_ws) > 1 else ins[1] @ ag_ws[0])
+            ag_outs = ag_out if isinstance(ag_out, tuple) else (ag_out,)
+            for name, val in zip(n.outputs, (rs_out,) + ag_outs):
+                env[name] = val
         else:
             raise ValueError(n.op)
     return tuple(env[o] for o in g.outputs)
@@ -366,6 +516,31 @@ def sublayer_graph() -> Graph:
         ],
         outputs=("g2",),
     )
+
+
+def merge_graphs(graphs: Sequence[Graph],
+                 prefixes: Optional[Sequence[str]] = None) -> Graph:
+    """Disjoint union of several graphs with value/node renaming — e.g. two
+    microbatches of the same transformer block, so cross-graph passes
+    (``pair_asymmetric``) can co-schedule collectives across them. Weight
+    keys are NOT renamed: merged graphs share one weights dict (the
+    microbatches run the same block parameters)."""
+    if prefixes is None:
+        prefixes = [f"mb{i}." for i in range(len(graphs))]
+    if len(prefixes) != len(graphs):
+        raise GraphError(
+            f"merge_graphs got {len(graphs)} graphs but "
+            f"{len(prefixes)} prefixes")
+    nodes: List[Node] = []
+    outs: List[str] = []
+    for g, p in zip(graphs, prefixes):
+        for n in g.nodes:
+            nodes.append(dataclasses.replace(
+                n, name=p + n.name,
+                inputs=tuple(p + v for v in n.inputs),
+                outputs=tuple(p + v for v in n.outputs)))
+        outs.extend(p + o for o in g.outputs)
+    return Graph(nodes, tuple(outs))
 
 
 def dual_sublayer_graph() -> Graph:

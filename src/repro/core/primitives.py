@@ -407,13 +407,19 @@ def overlap_asymmetric(rs_args, ag_args, axis: str,
     link bidirectionally).
 
     rs_args: (x_rs (B,S,d_loc), w_rs (d_loc,F)); ag_args: (x_ag (B,S_loc,d),
-    w_ag (d,F_loc)). Returns (rs_out (B,S_loc,F), ag_out (B,S,F_loc)).
+    w_ag (d,F_loc) — or a tuple of such weights sharing the one AG
+    circulation, e.g. a paired ``ag_gemm_multi``). Returns
+    (rs_out (B,S_loc,F), ag_out (B,S,F_loc)) — ``ag_out`` is a tuple of
+    per-weight outputs when ``w_ag`` is a tuple.
     """
     x_rs, w_rs = rs_args
     x_ag, w_ag = ag_args
+    multi = isinstance(w_ag, (tuple, list))
+    ws_ag = tuple(w_ag) if multi else (w_ag,)
     n = cais.interpret_n or _axis_size(axis)
     if n == 1:
-        return x_rs @ w_rs, x_ag @ w_ag
+        outs = tuple(x_ag @ w for w in ws_ag)
+        return x_rs @ w_rs, (outs if multi else outs[0])
     i = lax.axis_index(axis)
     B, S, _ = x_rs.shape
     S_loc = S // n
@@ -431,16 +437,18 @@ def overlap_asymmetric(rs_args, ag_args, axis: str,
         acc = lax.ppermute(acc, axis, fwd)
         acc = acc + rs_partial((i - 1 - t) % n)
         # AG stream on the −1 direction (data-independent of the RS stream)
-        part = chunk @ w_ag
+        part = tuple(chunk @ w for w in ws_ag)
         chunk = lax.ppermute(chunk, axis, bwd)
         return (acc, chunk), part
 
     acc0 = rs_partial((i - 1) % n)
-    part0 = x_ag @ w_ag
+    part0 = tuple(x_ag @ w for w in ws_ag)
     chunk0 = lax.ppermute(x_ag, axis, bwd)
     (acc, _), parts = lax.scan(step, (acc0, chunk0), jnp.arange(1, n))
 
-    parts = jnp.concatenate([part0[None], parts], axis=0)  # (n, B, S_loc, F)
-    ordered = jnp.roll(parts, i, axis=0)   # ordered[j] = parts[(j−i)%n]
-    ag_out = ordered.transpose(1, 0, 2, 3).reshape(B, n * S_loc, -1)
-    return acc, ag_out
+    ag_outs = []
+    for k in range(len(ws_ag)):
+        pk = jnp.concatenate([part0[k][None], parts[k]], axis=0)  # (n,B,s,F)
+        ordered = jnp.roll(pk, i, axis=0)   # ordered[j] = parts[(j−i)%n]
+        ag_outs.append(ordered.transpose(1, 0, 2, 3).reshape(B, n * S_loc, -1))
+    return acc, (tuple(ag_outs) if multi else ag_outs[0])

@@ -78,29 +78,41 @@ def _smap(tpc: TPContext, fn, in_specs, out_specs):
 # ---------------------------------------------------------------------------
 
 
+def _ffn_chain_nodes(src: str, out: str, has_gate: bool, act: str,
+                     tag: str = "") -> list:
+    """AG → GEMM(up[, gate]) → act[(·)] → GEMM(down) → RS nodes from value
+    ``src`` to value ``out`` (weight keys w_up/w_gate/w_down); ``tag``
+    uniquifies node names when the chain is embedded in a larger graph."""
+    from repro.models.layers import activation
+
+    ag, up, gate, h, down = (f"agx{tag}", f"up{tag}", f"gate{tag}",
+                             f"h{tag}", f"down{tag}")
+    nodes = [
+        df.Node(ag, "allgather", (src,)),
+        df.Node(up, "gemm_col", (ag,), ("w_up",)),
+    ]
+    if has_gate:
+        nodes.append(df.Node(gate, "gemm_col", (ag,), ("w_gate",)))
+        nodes.append(df.Node(h, "custom", (up, gate),
+                             fn=lambda u, g: activation(act, g) * u))
+    else:
+        nodes.append(df.Node(h, "custom", (up,),
+                             fn=lambda u: activation(act, u)))
+    nodes += [
+        df.Node(down, "gemm_row", (h,), ("w_down",)),
+        df.Node(out, "reduce_scatter", (down,)),
+    ]
+    return nodes
+
+
 def ffn_sublayer_graph(has_gate: bool, act: str) -> df.Graph:
     """LN → AG → GEMM(up[, gate]) → act[(·)] → GEMM(down) → RS as IR nodes.
     ``optimize()`` turns the collectives into the backend's fused schedules
     (ag_gemm / ag_gemm_multi / gemm_rs)."""
-    from repro.models.layers import activation
-
     nodes = [
         df.Node("x", "input"),
         df.Node("ln", "layernorm", ("x",), ("scale",)),
-        df.Node("agx", "allgather", ("ln",)),
-        df.Node("up", "gemm_col", ("agx",), ("w_up",)),
-    ]
-    if has_gate:
-        nodes.append(df.Node("gate", "gemm_col", ("agx",), ("w_gate",)))
-        nodes.append(df.Node("h", "custom", ("up", "gate"),
-                             fn=lambda u, g: activation(act, g) * u))
-    else:
-        nodes.append(df.Node("h", "custom", ("up",),
-                             fn=lambda u: activation(act, u)))
-    nodes += [
-        df.Node("down", "gemm_row", ("h",), ("w_down",)),
-        df.Node("out", "reduce_scatter", ("down",)),
-    ]
+    ] + _ffn_chain_nodes("ln", "out", has_gate, act)
     return df.Graph(nodes, outputs=("out",))
 
 
@@ -121,6 +133,68 @@ def attention_sublayer_graph(core_fn: Callable) -> df.Graph:
         df.Node("out", "reduce_scatter", ("proj",)),
     ]
     return df.Graph(nodes, outputs=("out",))
+
+
+# ---------------------------------------------------------------------------
+# Whole-block dataflow graphs: attention residual → FFN/MoE residual in ONE
+# graph, so pass 2 fuses the rs→ln→ag seam between the sub-layers and pass 3
+# can co-schedule collectives across independent chains (microbatches).
+# ---------------------------------------------------------------------------
+
+
+def _attention_block_nodes(core_fn: Callable) -> list:
+    """x → LN1 → AG → QKV → core → out-GEMM → RS → +x residual (value r1)."""
+    return [
+        df.Node("x", "input"),
+        df.Node("ln1", "layernorm", ("x",), ("scale1",)),
+        df.Node("agx1", "allgather", ("ln1",)),
+        df.Node("q", "gemm_col", ("agx1",), ("wq",)),
+        df.Node("k", "gemm_col", ("agx1",), ("wk",)),
+        df.Node("v", "gemm_col", ("agx1",), ("wv",)),
+        df.Node("o", "custom", ("q", "k", "v"), fn=core_fn),
+        df.Node("proj", "gemm_row", ("o",), ("wo",)),
+        df.Node("rs1", "reduce_scatter", ("proj",)),
+        df.Node("r1", "residual", ("rs1", "x")),
+    ]
+
+
+def dense_block_graph(core_fn: Callable, has_gate: bool, act: str) -> df.Graph:
+    """One Graph for a whole dense transformer block. After ``optimize()``
+    the attention-out RS, the residual add, LN2, and the FFN input gather
+    collapse into one ``fused_rs_ln_ag[_multi]`` pipeline (pass 2) — the
+    cross-sub-layer seam a per-sub-layer graph can never see."""
+    nodes = _attention_block_nodes(core_fn) + [
+        df.Node("ln2", "layernorm", ("r1",), ("scale2",)),
+    ] + _ffn_chain_nodes("ln2", "rs2", has_gate, act, tag="2") + [
+        df.Node("r2", "residual", ("rs2", "r1")),
+    ]
+    return df.Graph(nodes, outputs=("r2",))
+
+
+def moe_block_graph(core_fn: Callable, route_fn: Callable,
+                    expert_fn: Callable, unroute_fn: Callable,
+                    expert_weights: tuple, has_gate: bool,
+                    dense_fn: Optional[Callable] = None,
+                    dense_weights: tuple = ()) -> df.Graph:
+    """One Graph for a whole MoE transformer block: the expert path runs as
+    ``route → a2a_ffn → unroute`` IR nodes, with ``a2a_ffn`` dispatched
+    through ``CollectiveBackend.a2a_expert_ffn``. ``dense_fn`` adds the
+    Arctic-style parallel dense-residual MLP as a ``custom`` node."""
+    nodes = _attention_block_nodes(core_fn) + [
+        df.Node("ln2", "layernorm", ("r1",), ("scale2",)),
+        df.Node("moe_route", "route", ("ln2",), ("router",),
+                outputs=("send", "combine", "aux"), fn=route_fn),
+        df.Node("eout", "a2a_ffn", ("send",), expert_weights, fn=expert_fn),
+        df.Node("y", "unroute", ("eout", "combine", "ln2"), fn=unroute_fn),
+    ]
+    top = "y"
+    if dense_fn is not None:
+        nodes.append(df.Node("dmlp", "custom", ("ln2",), dense_weights,
+                             fn=dense_fn))
+        nodes.append(df.Node("ymoe", "add", ("y", "dmlp")))
+        top = "ymoe"
+    nodes.append(df.Node("r2", "residual", (top, "r1")))
+    return df.Graph(nodes, outputs=("r2", "aux"))
 
 
 # ---------------------------------------------------------------------------
@@ -158,20 +232,15 @@ def sp_ffn(tpc: TPContext, x, norm_scale, w_up, w_gate, w_down,
 # ---------------------------------------------------------------------------
 
 
-def sp_attention(tpc: TPContext, x, norm_scale, wq, wk, wv, wo, cfg,
-                 window: int = 0, prefix_len: int = 0,
-                 norm_kind: str = "rmsnorm"):
-    """Full Megatron-SP attention block over the collective backend.
-    x: (B, S, d) sequence-sharded; Q heads shard over `model`. When
-    num_kv_heads < tp (GQA/MQA), K/V weights replicate and every device
-    computes the full K/V from the same gathered activation chunks — the
-    standard Megatron KV-replication, and the gather is still shared with
-    the Q projection (one ring circulation feeds all three)."""
+def _attention_core_fn(cfg, tp: int, window: int = 0, prefix_len: int = 0
+                       ) -> Callable:
+    """The local attention math (rope, KV head slicing, flash core, head
+    reshape) as a closure for a ``custom`` IR node — shared by
+    :func:`sp_attention` and :func:`sp_block`."""
     from repro.models.attention import attention_core
     from repro.models.layers import apply_rope
 
     H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
-    tp = tpc.tp
     kv_sharded = Hkv % tp == 0
 
     def core(q, k, v):
@@ -193,6 +262,22 @@ def sp_attention(tpc: TPContext, x, norm_scale, wq, wk, wv, wo, cfg,
         o = attention_core(q, k, v, q_positions=pos, kv_positions=pos,
                            causal=True, window=window, prefix_len=prefix_len)
         return o.reshape(B_, S, H_loc * dh)
+
+    return core
+
+
+def sp_attention(tpc: TPContext, x, norm_scale, wq, wk, wv, wo, cfg,
+                 window: int = 0, prefix_len: int = 0,
+                 norm_kind: str = "rmsnorm"):
+    """Full Megatron-SP attention block over the collective backend.
+    x: (B, S, d) sequence-sharded; Q heads shard over `model`. When
+    num_kv_heads < tp (GQA/MQA), K/V weights replicate and every device
+    computes the full K/V from the same gathered activation chunks — the
+    standard Megatron KV-replication, and the gather is still shared with
+    the Q projection (one ring circulation feeds all three)."""
+    tp = tpc.tp
+    kv_sharded = cfg.num_kv_heads % tp == 0
+    core = _attention_core_fn(cfg, tp, window=window, prefix_len=prefix_len)
 
     graph = df.optimize(attention_sublayer_graph(core))
 
@@ -228,72 +313,30 @@ def sp_moe_ffn(tpc: TPContext, x, norm_scale, params, cfg,
     E ≥ tp (E % tp == 0); when E < tp (tp % E == 0) expert e lives on
     device e·(tp/E) and the others idle through the FFN (their buffers are
     zero-capacity padding). x: (B, S, d) sequence-sharded. Returns FFN(LN(x))
-    (residual handled by the caller) and the load-balancing aux loss."""
-    from repro.models.ffn import _top2_dispatch
-    from repro.models.layers import activation, apply_norm
+    (residual handled by the caller) and the load-balancing aux loss.
+
+    The routing/expert/combine math is shared with the whole-block IR path
+    (:func:`sp_block`) via the :func:`_moe_graph_fns` closures."""
+    from repro.models.layers import apply_norm
 
     m = cfg.moe
     E = m.num_experts
     tp = tpc.tp
     cais = tpc.cais
-    E_loc = max(E // tp, 1)
     has_gate = "w_gate" in params
+    route_fn, expert_fn, unroute_fn = _moe_graph_fns(cfg, tp, has_gate)
 
     def local(x, ns, router, wu, wg, wd):
-        B, S_loc, d = x.shape
         xn = apply_norm(norm_kind, {"scale": ns}, x)
-        t = xn.reshape(B * S_loc, d)
-        T = t.shape[0]
-
-        logits = t.astype(jnp.float32) @ router
-        probs = jax.nn.softmax(logits, -1)
-        cap = max(1, int(T * m.top_k / E * m.capacity_factor))
-        dispatch, combine, aux = _top2_dispatch(probs[None], cap)
-        dispatch, combine = dispatch[0], combine[0]     # (T, E, cap)
-
-        # send[j]: (E_loc·cap, d) tokens for the experts device j owns
-        de = jnp.einsum("tec,td->ecd", dispatch.astype(t.dtype), t)
-        if E >= tp:
-            send = de.reshape(tp, E_loc * cap, d)
-        else:
-            # owner(e) = e·(tp/E); other devices get zero-capacity padding
-            stride = tp // E
-            send = jnp.zeros((tp, cap, d), t.dtype)
-            send = send.at[::stride].set(de)
-
-        if E >= tp:
-            wu_l, wg_l, wd_l = wu, wg, wd   # already the local expert shard
-        else:
-            # replicated weights: slice this owner's single expert
-            eidx = jax.lax.axis_index(MODEL) // (tp // E)
-            wu_l = jax.lax.dynamic_index_in_dim(wu, eidx, 0, keepdims=True)
-            wg_l = jax.lax.dynamic_index_in_dim(wg, eidx, 0, keepdims=True)
-            wd_l = jax.lax.dynamic_index_in_dim(wd, eidx, 0, keepdims=True)
-
-        def expert_ffn(chunk):
-            # chunk: (E_loc·cap, d) → per-local-expert gated FFN
-            c = chunk.reshape(E_loc, -1, d)
-            h = jnp.einsum("ecd,edf->ecf", c, wu_l)
-            if has_gate:
-                g = jnp.einsum("ecd,edf->ecf", c, wg_l)
-                h = activation(cfg.act, g) * h
-            else:
-                h = activation(cfg.act, h)
-            out = jnp.einsum("ecf,efd->ecd", h, wd_l)
-            return out.reshape(chunk.shape)
-
-        ret = tpc.backend.a2a_expert_ffn(send, expert_ffn, MODEL, cais)
-
-        if E >= tp:
-            eout = ret.reshape(E, cap, d)
-        else:
-            eout = ret[::tp // E]
-        y = jnp.einsum("tec,ecd->td", combine.astype(t.dtype), eout)
-        out = y.reshape(B, S_loc, d)
+        send, combine, aux = route_fn(xn, router)
+        ws = (wu, wg, wd) if has_gate else (wu, wd)
+        ret = tpc.backend.a2a_expert_ffn(
+            send, lambda chunk: expert_fn(chunk, *ws), MODEL, cais)
+        out = unroute_fn(ret, combine, xn)
         if m.dense_residual_d_ff:
             from repro.models.ffn import mlp_forward
             out = out + mlp_forward(params["dense"], xn, cfg.act)
-        return out, aux.astype(jnp.float32)[None]
+        return out, aux
 
     dtype = x.dtype
     wu = params["w_up"].astype(dtype)
@@ -308,6 +351,179 @@ def sp_moe_ffn(tpc: TPContext, x, norm_scale, params, cfg,
         out_specs=[(BATCH, MODEL, None), (MODEL,)])(
             x, norm_scale, params["router"], wu, wg, wd)
     return out, jnp.mean(aux)
+
+
+# ---------------------------------------------------------------------------
+# Whole-block execution: ONE dataflow graph per transformer block
+# ---------------------------------------------------------------------------
+
+
+def _moe_graph_fns(cfg, tp: int, has_gate: bool):
+    """Closures for the MoE expert path (route / a2a expert compute /
+    unroute) — the single home of this math, used both as IR node ``fn``s
+    by :func:`sp_block`'s graph and composed directly by
+    :func:`sp_moe_ffn`. Owner mapping as documented on ``sp_moe_ffn``:
+    device j owns experts [j·E_loc, (j+1)·E_loc) when E ≥ tp; when E < tp
+    expert e lives on device e·(tp/E) (replicated weights sliced per owner,
+    zero-capacity padding elsewhere)."""
+    from repro.models.ffn import _top2_dispatch
+    from repro.models.layers import activation
+
+    m = cfg.moe
+    E = m.num_experts
+    E_loc = max(E // tp, 1)
+
+    def route_fn(xn, router):
+        B, S_loc, d = xn.shape
+        t = xn.reshape(B * S_loc, d)
+        T = t.shape[0]
+        logits = t.astype(jnp.float32) @ router
+        probs = jax.nn.softmax(logits, -1)
+        cap = max(1, int(T * m.top_k / E * m.capacity_factor))
+        dispatch, combine, aux = _top2_dispatch(probs[None], cap)
+        dispatch, combine = dispatch[0], combine[0]     # (T, E, cap)
+        # send[j]: (E_loc·cap, d) tokens for the experts device j owns
+        de = jnp.einsum("tec,td->ecd", dispatch.astype(t.dtype), t)
+        if E >= tp:
+            send = de.reshape(tp, E_loc * cap, d)
+        else:
+            # owner(e) = e·(tp/E); other devices get zero-capacity padding
+            stride = tp // E
+            send = jnp.zeros((tp, cap, d), t.dtype)
+            send = send.at[::stride].set(de)
+        return send, combine, aux.astype(jnp.float32)[None]
+
+    def expert_fn(chunk, wu, *rest):
+        # chunk: (E_loc·cap, d) → per-local-expert gated FFN
+        wg = rest[0] if has_gate else None
+        wd = rest[-1]
+        if E < tp:
+            # replicated weights: slice this owner's single expert
+            eidx = jax.lax.axis_index(MODEL) // (tp // E)
+            wu = jax.lax.dynamic_index_in_dim(wu, eidx, 0, keepdims=True)
+            wd = jax.lax.dynamic_index_in_dim(wd, eidx, 0, keepdims=True)
+            if has_gate:
+                wg = jax.lax.dynamic_index_in_dim(wg, eidx, 0, keepdims=True)
+        c = chunk.reshape(E_loc, -1, chunk.shape[-1])
+        h = jnp.einsum("ecd,edf->ecf", c, wu)
+        if has_gate:
+            g = jnp.einsum("ecd,edf->ecf", c, wg)
+            h = activation(cfg.act, g) * h
+        else:
+            h = activation(cfg.act, h)
+        out = jnp.einsum("ecf,efd->ecd", h, wd)
+        return out.reshape(chunk.shape)
+
+    def unroute_fn(ret, combine, xn):
+        B, S_loc, d = xn.shape
+        cap = combine.shape[-1]
+        if E >= tp:
+            eout = ret.reshape(E, cap, d)
+        else:
+            eout = ret[::tp // E]
+        y = jnp.einsum("tec,ecd->td", combine.astype(ret.dtype), eout)
+        return y.reshape(B, S_loc, d)
+
+    return route_fn, expert_fn, unroute_fn
+
+
+def sp_block(tpc: TPContext, x, params, cfg, kind: str = "attn",
+             prefix_len: int = 0, norm_kind: str = "rmsnorm"):
+    """A whole pre-norm transformer block — attention residual → FFN/MoE
+    residual — built as ONE dataflow graph, optimized, and executed in ONE
+    ``shard_map``. Unlike the per-sub-layer path (``sp_attention`` +
+    ``sp_ffn``/``sp_moe_ffn``), the graph spans the attention-out → FFN-in
+    seam, so pass 2 fuses RS → residual → LN → AG into one pipeline on every
+    dense block and MoE routing flows through the same IR.
+
+    ``params`` is the block param dict from ``models.transformer.init_block``
+    (``norm1``/``mixer``/``norm2``/``ffn``). x: (B, S, d) sequence-sharded.
+    Returns (block output, aux loss)."""
+    dtype = x.dtype
+    tp = tpc.tp
+    m = params["mixer"]
+    kv_sharded = cfg.num_kv_heads % tp == 0
+    window = cfg.window if kind == "swa" else 0
+    core = _attention_core_fn(cfg, tp, window=window, prefix_len=prefix_len)
+
+    kv_spec = (None, MODEL) if kv_sharded else (None, None)
+    weights = {
+        "scale1": params["norm1"]["scale"].astype(dtype),
+        "wq": m["wq"].astype(dtype), "wk": m["wk"].astype(dtype),
+        "wv": m["wv"].astype(dtype), "wo": m["wo"].astype(dtype),
+        "scale2": params["norm2"]["scale"].astype(dtype),
+    }
+    specs = {
+        "scale1": (None,), "wq": (None, MODEL), "wk": kv_spec,
+        "wv": kv_spec, "wo": (MODEL, None), "scale2": (None,),
+    }
+
+    f = params["ffn"]
+    has_gate = "w_gate" in f
+    moe = cfg.moe is not None
+    if moe:
+        assert cfg.moe.num_experts % tp == 0, \
+            "sp_block MoE path requires E % tp == 0 (see tp_applicable)"
+        route_fn, expert_fn, unroute_fn = _moe_graph_fns(cfg, tp, has_gate)
+        weights["router"] = f["router"]                 # stays float32
+        specs["router"] = (None, None)
+        e_keys = ("w_up",) + (("w_gate",) if has_gate else ()) + ("w_down",)
+        for kkey in e_keys:
+            weights[kkey] = f[kkey].astype(dtype)
+            specs[kkey] = (MODEL, None, None)
+        dense_fn, d_keys = None, ()
+        if cfg.moe.dense_residual_d_ff:
+            dm = f["dense"]
+            dense_gate = "w_gate" in dm
+            d_keys = ("d_up",) + (("d_gate",) if dense_gate else ()) + \
+                ("d_down",)
+            weights["d_up"] = dm["w_up"].astype(dtype)
+            if dense_gate:
+                weights["d_gate"] = dm["w_gate"].astype(dtype)
+            weights["d_down"] = dm["w_down"].astype(dtype)
+            for kkey in d_keys:
+                specs[kkey] = (None, None)
+            from repro.models.layers import activation
+
+            def dense_fn(xn, du, *drest):
+                dg = drest[0] if dense_gate else None
+                dd = drest[-1]
+                h = xn @ du
+                if dense_gate:
+                    h = activation(cfg.act, xn @ dg) * h
+                else:
+                    h = activation(cfg.act, h)
+                return h @ dd
+
+        graph = moe_block_graph(core, route_fn, expert_fn, unroute_fn,
+                                e_keys, has_gate, dense_fn=dense_fn,
+                                dense_weights=d_keys)
+    else:
+        graph = dense_block_graph(core, has_gate, cfg.act)
+        weights["w_up"] = f["w_up"].astype(dtype)
+        specs["w_up"] = (None, MODEL)
+        if has_gate:
+            weights["w_gate"] = f["w_gate"].astype(dtype)
+            specs["w_gate"] = (None, MODEL)
+        weights["w_down"] = f["w_down"].astype(dtype)
+        specs["w_down"] = (MODEL, None)
+
+    graph = df.optimize(graph)
+    names = list(weights)
+
+    def local(x, *ws):
+        outs = df.execute(graph, {"x": x}, dict(zip(names, ws)),
+                          axis=MODEL, cais=tpc.cais, norm=norm_kind,
+                          backend=tpc.backend)
+        return outs if moe else outs[0]
+
+    in_specs = [(BATCH, MODEL, None)] + [specs[k] for k in names]
+    out_specs = ([(BATCH, MODEL, None), (MODEL,)] if moe
+                 else (BATCH, MODEL, None))
+    res = _smap(tpc, local, in_specs, out_specs)(x, *weights.values())
+    if moe:
+        return res[0], jnp.mean(res[1])
+    return res, jnp.float32(0.0)
 
 
 def tp_applicable(cfg, kind: str, tp: int) -> bool:

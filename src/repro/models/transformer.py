@@ -89,11 +89,31 @@ def _tp_context(rt: Runtime):
 
 def block_forward(kind, params, x, cfg: ArchConfig, rt: Runtime,
                   prefix_len: int = 0):
-    """Pre-norm residual block. Returns (x, aux_loss)."""
+    """Pre-norm residual block. Returns (x, aux_loss).
+
+    When the whole block is TP-applicable (attention AND dense-FFN/MoE), it
+    runs as ONE dataflow graph in one ``shard_map`` (``tp_mod.sp_block``):
+    the graph spans the attention-out → FFN-in seam, so the optimizer's
+    pass 2 fuses RS → residual → LN → AG across the sub-layer boundary and
+    MoE routing goes through the IR. Blocks where only one side is
+    applicable fall back to the per-sub-layer graphs below."""
     from repro.core import tp as tp_mod
 
     tpc = _tp_context(rt) if x.shape[1] > 1 else None
     dtype = x.dtype
+
+    # ----- whole block as one dataflow graph -----
+    if tpc is not None and x.shape[1] % tpc.tp == 0 \
+            and kind in ("attn", "swa") \
+            and tp_mod.tp_applicable(cfg, kind, tpc.tp) and _has_ffn(cfg) \
+            and (tp_mod.tp_applicable(cfg, "moe", tpc.tp)
+                 or tp_mod.tp_applicable(cfg, "ffn", tpc.tp)):
+        x, aux = tp_mod.sp_block(tpc, x, params, cfg, kind,
+                                 prefix_len=prefix_len, norm_kind=cfg.norm)
+        sp = sharding.MODEL_AXIS if (rt.sequence_parallel
+                                     and x.shape[1] > 1) else None
+        x = sharding.shard(x, sharding.BATCH_AXES, sp, None)
+        return x, aux
 
     # ----- mixer -----
     if tpc is not None and tp_mod.tp_applicable(cfg, kind, tpc.tp) \

@@ -234,6 +234,75 @@ def main():
         check(f"sp_attention.gqa_replicated_kv.{mode}",
               float(jnp.abs(got - gqa_ref).max()), 1e-5)
 
+    # ---------------- whole-block graph vs PR-1 per-sub-layer path --------
+    # sp_block builds ONE dataflow graph per transformer block (pass 2 fuses
+    # the attention-out → FFN-in seam into fused_rs_ln_ag_multi); pin it to
+    # the split sp_attention + sp_ffn / sp_moe_ffn composition on the 4-way
+    # ring for dense, GQA, and MoE blocks, per backend, at 1e-6.
+    import dataclasses as _dc
+
+    import repro.models.transformer as tr_mod
+
+    def split_block(tpc, x, params, cfg):
+        p, mm = params, params["mixer"]
+        r1 = x + tp_mod.sp_attention(
+            tpc, x, p["norm1"]["scale"], mm["wq"], mm["wk"], mm["wv"],
+            mm["wo"], cfg)
+        if cfg.moe is not None:
+            out, aux_ = tp_mod.sp_moe_ffn(tpc, r1, p["norm2"]["scale"],
+                                          p["ffn"], cfg)
+            return r1 + out, aux_
+        f_ = p["ffn"]
+        return r1 + tp_mod.sp_ffn(tpc, r1, p["norm2"]["scale"], f_["w_up"],
+                                  f_.get("w_gate"), f_["w_down"],
+                                  cfg.act), jnp.float32(0.0)
+
+    cfg_blk = cfg_at                                  # dense, kv sharded
+    cfg_blk_gqa = cfg_at.scaled(num_kv_heads=2)       # replicated KV
+    cfg_blk_moe = get_arch("mixtral-8x7b").smoke().scaled(
+        num_layers=1, d_model=d, num_heads=4, num_kv_heads=4, head_dim=8,
+        d_ff=d_ff, window=16)
+    cfg_blk_moe = cfg_blk_moe.scaled(moe=_dc.replace(
+        cfg_blk_moe.moe, capacity_factor=8.0))
+    assert cfg_blk_moe.moe.num_experts % 4 == 0
+    for label, cfg_b in (("dense", cfg_blk), ("gqa", cfg_blk_gqa),
+                         ("moe", cfg_blk_moe)):
+        params_b = tr_mod.init_block(jax.random.key(23), "attn", cfg_b,
+                                     jnp.float32)
+        for mode in ("barrier", "cais"):
+            tpc4 = tp_mod.TPContext(mesh=mesh4, backend=mode, cais=cais4)
+            got, aux_g = tp_mod.sp_block(tpc4, x, params_b, cfg_b, "attn")
+            ref, aux_r = split_block(tpc4, x, params_b, cfg_b)
+            check(f"block_graph.{label}.{mode}",
+                  float(jnp.abs(got - ref).max()), 1e-6)
+            check(f"block_graph.{label}.{mode}.aux",
+                  abs(float(aux_g) - float(aux_r)), 1e-6)
+        # the block graph must actually carry the cross-sub-layer fusion
+        if cfg_b.moe is None:
+            core = tp_mod._attention_core_fn(cfg_b, 4)
+            opt = df.optimize(tp_mod.dense_block_graph(
+                core, True, cfg_b.act))
+            ops = [n.op for n in opt.nodes]
+            check(f"block_graph.{label}.pass2_fired",
+                  0.0 if "fused_rs_ln_ag_multi" in ops else 1.0)
+
+    # E < tp owner mapping (replicated expert weights, zero-capacity
+    # padding): the shared routing closures must agree with a 1-device run
+    # of the same params (capacity large enough that no token drops)
+    params_ep = tr_mod.init_block(jax.random.key(24), "attn", cfg_blk_moe,
+                                  jnp.float32)
+    mesh8x = sharding.make_mesh((1, 8), ("data", "model"))   # tp=8 > E=4
+    mesh1x = sharding.make_mesh((1, 1), ("data", "model"))
+    outs_ep = {}
+    for name_, mesh_ in (("tp8", mesh8x), ("tp1", mesh1x)):
+        tpc_ = tp_mod.TPContext(mesh=mesh_, backend="cais", cais=cais4)
+        outs_ep[name_], _ = tp_mod.sp_moe_ffn(
+            tpc_, x, params_ep["norm2"]["scale"], params_ep["ffn"],
+            cfg_blk_moe)
+    check("sp_moe_ffn.e_lt_tp",
+          float(np.abs(np.asarray(outs_ep["tp8"])
+                       - np.asarray(outs_ep["tp1"])).max()), 1e-5)
+
     # ---------------- full model: auto == barrier == cais ----------------
     mesh2 = sharding.make_mesh((2, 4), ("data", "model"))
     cfg = get_arch("deepseek-7b").smoke().scaled(

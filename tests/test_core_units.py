@@ -103,6 +103,34 @@ def test_fusion_legal_when_rs_escapes():
         np.testing.assert_allclose(np.asarray(u), np.asarray(v), atol=1e-5)
 
 
+def test_no_fuse_when_pre_add_value_escapes():
+    """gemm_rs → residual → ln → ag where the PRE-add rs value is itself a
+    graph output: the fused op re-exposes only the post-add z, so pass 2
+    must skip the chain (not drop the output and crash)."""
+    nodes = [
+        df.Node("x", "input"),
+        df.Node("res", "input"),
+        df.Node("g1", "gemm_row", ("x",), ("w1",)),
+        df.Node("rs", "reduce_scatter", ("g1",)),
+        df.Node("r1", "residual", ("rs", "res")),
+        df.Node("ln", "layernorm", ("r1",), ("scale",)),
+        df.Node("ag", "allgather", ("ln",)),
+        df.Node("g2", "gemm_col", ("ag",), ("w2",)),
+    ]
+    g = df.Graph(list(nodes), outputs=("g2", "rs"))
+    opt = df.optimize(g)                       # must not raise GraphError
+    ops = {n.op for n in opt.nodes}
+    assert "fused_rs_ln_ag" not in ops
+    assert {"gemm_rs", "ag_gemm"} <= ops
+    w = _graph_weights(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 8, 16))
+    res = jax.random.normal(jax.random.key(2), (2, 8, 24))
+    a = df.execute(g, {"x": x, "res": res}, w)
+    b = df.execute(opt, {"x": x, "res": res}, w)
+    for u, v in zip(a, b):
+        np.testing.assert_allclose(np.asarray(u), np.asarray(v), atol=1e-5)
+
+
 def test_no_fuse_when_intermediate_escapes():
     """ln output escaping the chain blocks the deep fusion (it is not
     re-exposed by the fused op), but pass-1 alignment still applies."""
@@ -119,6 +147,126 @@ def test_no_fuse_when_intermediate_escapes():
     ops = {n.op for n in opt.nodes}
     assert "fused_rs_ln_ag" not in ops
     assert {"gemm_rs", "ag_gemm"} <= ops
+
+
+# ---------------------------------------------------------------------------
+# whole-block dataflow graphs (ISSUE 2 tentpole): pass 2 and pass 3 must
+# demonstrably rewrite nodes on a dense-config block
+# ---------------------------------------------------------------------------
+
+
+def _toy_core(q, k, v):
+    # stand-in attention core: local math with the same (B, S, d) layout
+    return q * jax.nn.sigmoid(k) + v
+
+
+def _block_weights(key, d=16, f=24):
+    ks = jax.random.split(key, 9)
+    return {
+        "scale1": jax.random.normal(ks[0], (d,)) * 0.1 + 1.0,
+        "wq": jax.random.normal(ks[1], (d, d)) * 0.1,
+        "wk": jax.random.normal(ks[2], (d, d)) * 0.1,
+        "wv": jax.random.normal(ks[3], (d, d)) * 0.1,
+        "wo": jax.random.normal(ks[4], (d, d)) * 0.1,
+        "scale2": jax.random.normal(ks[5], (d,)) * 0.1 + 1.0,
+        "w_up": jax.random.normal(ks[6], (d, f)) * 0.1,
+        "w_gate": jax.random.normal(ks[7], (d, f)) * 0.1,
+        "w_down": jax.random.normal(ks[8], (f, d)) * 0.1,
+    }
+
+
+def test_block_graph_pass2_fuses_cross_sublayer_seam():
+    """On a gated dense block (every dense model in configs/ is gated silu)
+    pass 2 must fuse attention-out RS → residual → LN2 → FFN-in shared
+    gather into ONE fused_rs_ln_ag_multi pipeline."""
+    from repro.core import tp
+
+    g = df.optimize(tp.dense_block_graph(_toy_core, True, "silu"))
+    ops = [n.op for n in g.nodes]
+    assert "fused_rs_ln_ag_multi" in ops          # pass 2 rewrote the seam
+    assert "ag_gemm_multi" in ops                 # QKV shared gather (pass 1b)
+    # every raw collective was consumed by a fusion pass
+    assert not ({"allgather", "reduce_scatter"} & set(ops))
+    # the non-gated variant fuses to the single-weight pipeline
+    g2 = df.optimize(tp.dense_block_graph(_toy_core, False, "gelu"))
+    assert "fused_rs_ln_ag" in [n.op for n in g2.nodes]
+
+
+def test_block_graph_pass3_pairs_across_microbatches():
+    """Two independent microbatches of the same dense block merged into one
+    graph: pass 3 must co-schedule one microbatch's FFN-out gemm_rs against
+    the other's attention-in shared gather (overlap_asym)."""
+    from repro.core import tp
+
+    g = df.merge_graphs([tp.dense_block_graph(_toy_core, True, "silu"),
+                         tp.dense_block_graph(_toy_core, True, "silu")])
+    opt = df.optimize(g)
+    assert any(n.op == "overlap_asym" for n in opt.nodes)
+
+
+def test_block_graph_reference_semantics():
+    """optimize() must preserve the math of the whole-block graph (single
+    device reference), for both the single and dual-microbatch forms."""
+    from repro.core import tp
+
+    w = _block_weights(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 8, 16))
+    g = tp.dense_block_graph(_toy_core, True, "silu")
+    a = df.execute(g, {"x": x}, w)[0]
+    b = df.execute(df.optimize(g), {"x": x}, w)[0]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+    merged = df.merge_graphs([tp.dense_block_graph(_toy_core, True, "silu"),
+                              tp.dense_block_graph(_toy_core, True, "silu")])
+    vals = {"mb0.x": x, "mb1.x": x[::-1]}
+    outs_a = df.execute(merged, vals, w)
+    outs_b = df.execute(df.optimize(merged), vals, w)
+    for u, v in zip(outs_a, outs_b):
+        np.testing.assert_allclose(np.asarray(u), np.asarray(v), atol=1e-5)
+
+
+def test_sp_block_matches_split_path_single_device():
+    """sp_block (one graph per block) vs the PR-1 per-sub-layer composition
+    on a tp=1 mesh — dense and MoE."""
+    import dataclasses
+
+    import repro.models.transformer as tr
+    from repro import sharding
+    from repro.configs import get_arch
+    from repro.core import tp
+
+    mesh = sharding.make_mesh((1, 1), ("data", "model"))
+    d = 32
+    cfg = get_arch("deepseek-7b").smoke().scaled(
+        num_layers=1, d_model=d, num_heads=4, num_kv_heads=4, head_dim=8,
+        d_ff=64)
+    params = tr.init_block(jax.random.key(0), "attn", cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 8, d), jnp.float32)
+    tpc = tp.TPContext(mesh=mesh, backend="cais")
+    got, aux = tp.sp_block(tpc, x, params, cfg, "attn")
+    m, f = params["mixer"], params["ffn"]
+    r1 = x + tp.sp_attention(tpc, x, params["norm1"]["scale"], m["wq"],
+                             m["wk"], m["wv"], m["wo"], cfg)
+    ref = r1 + tp.sp_ffn(tpc, r1, params["norm2"]["scale"], f["w_up"],
+                         f.get("w_gate"), f["w_down"], cfg.act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-6)
+    assert float(aux) == 0.0
+
+    cfg_moe = get_arch("mixtral-8x7b").smoke().scaled(
+        num_layers=1, d_model=d, num_heads=4, num_kv_heads=4, head_dim=8,
+        d_ff=32, window=16)
+    cfg_moe = cfg_moe.scaled(moe=dataclasses.replace(
+        cfg_moe.moe, capacity_factor=8.0))
+    params = tr.init_block(jax.random.key(2), "attn", cfg_moe, jnp.float32)
+    got, aux = tp.sp_block(tpc, x, params, cfg_moe, "attn")
+    m = params["mixer"]
+    r1 = x + tp.sp_attention(tpc, x, params["norm1"]["scale"], m["wq"],
+                             m["wk"], m["wv"], m["wo"], cfg_moe)
+    out, aux_ref = tp.sp_moe_ffn(tpc, r1, params["norm2"]["scale"],
+                                 params["ffn"], cfg_moe)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(r1 + out),
+                               atol=1e-6)
+    np.testing.assert_allclose(float(aux), float(aux_ref), atol=1e-6)
 
 
 # ---------------------------------------------------------------------------

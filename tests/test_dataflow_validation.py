@@ -1,0 +1,83 @@
+"""Graph validation errors must name the offending node/value — a malformed
+block graph should fail loudly at build/optimize time, not loop or KeyError
+deep inside a pass (ISSUE 2 satellite)."""
+import pytest
+
+from repro.core import dataflow as df
+
+
+def test_unknown_op_names_node():
+    with pytest.raises(df.GraphError, match="bogus"):
+        df.Node("n1", "bogus")
+    with pytest.raises(df.GraphError, match="n1"):
+        df.Node("n1", "not-an-op")
+
+
+def test_cycle_names_nodes():
+    nodes = [
+        df.Node("x", "input"),
+        df.Node("a", "add", ("x", "b")),
+        df.Node("b", "add", ("x", "a")),
+    ]
+    g = df.Graph(nodes, outputs=("a",))
+    with pytest.raises(df.GraphError, match="cycle") as ei:
+        g.validate()
+    assert "a" in str(ei.value) and "b" in str(ei.value)
+
+
+def test_missing_producer_names_node_and_value():
+    nodes = [
+        df.Node("x", "input"),
+        df.Node("g1", "gemm_col", ("nowhere",), ("w1",)),
+    ]
+    g = df.Graph(nodes, outputs=("g1",))
+    with pytest.raises(df.GraphError, match="'g1'.*'nowhere'"):
+        g.validate()
+
+
+def test_missing_producer_caught_by_optimize():
+    """optimize() re-topo-sorts after every rewrite — a dangling input must
+    surface as a GraphError there too, not an opaque KeyError."""
+    nodes = [
+        df.Node("x", "input"),
+        df.Node("g1", "gemm_row", ("missing",), ("w1",)),
+        df.Node("rs", "reduce_scatter", ("g1",)),
+    ]
+    with pytest.raises(df.GraphError, match="missing"):
+        df.optimize(df.Graph(nodes, outputs=("rs",)))
+
+
+def test_unknown_graph_output():
+    g = df.Graph([df.Node("x", "input")], outputs=("ghost",))
+    with pytest.raises(df.GraphError, match="ghost"):
+        g.validate()
+
+
+def test_duplicate_producer():
+    nodes = [
+        df.Node("x", "input"),
+        df.Node("a", "layernorm", ("x",), ("s",)),
+        df.Node("dup", "add", ("x", "x"), outputs=("a",)),
+    ]
+    g = df.Graph(nodes, outputs=("a",))
+    with pytest.raises(df.GraphError, match="'a'"):
+        g.validate()
+
+
+def test_validate_passes_and_returns_graph():
+    g = df.sublayer_graph()
+    assert g.validate() is g
+
+
+def test_indexed_queries_match_scan_semantics():
+    """node_producing/consumers now run off the shared adjacency index —
+    pin their semantics (incl. multi-output fused nodes)."""
+    g = df.optimize(df.sublayer_graph())
+    fused = [n for n in g.nodes if n.op == "fused_rs_ln_ag"][0]
+    for value in fused.outputs:
+        assert g.node_producing(value) is fused
+    assert g.node_producing("no-such-value") is None
+    assert g.consumers("no-such-value") == []
+    g2 = df.sublayer_graph()
+    assert [n.name for n in g2.consumers("ln")] == ["ag"]
+    assert g2.node_producing("ln").name == "ln"
