@@ -15,11 +15,17 @@ from typing import Callable, Optional
 _ROWS: list = []
 
 
+def record(name: str, us_per_call: float, derived: str = "") -> None:
+    """Collect a row without printing — for re-recording rows a subprocess
+    bench already printed (its ``_ROWS`` lives in the child process)."""
+    _ROWS.append({"name": name, "us_per_call": round(us_per_call, 3),
+                  "derived": derived})
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     """One CSV row: ``name,us_per_call,derived`` (also collected for JSON)."""
     print(f"{name},{us_per_call:.3f},{derived}")
-    _ROWS.append({"name": name, "us_per_call": round(us_per_call, 3),
-                  "derived": derived})
+    record(name, us_per_call, derived)
 
 
 def dump_rows_json(path: Optional[str] = None) -> Optional[str]:

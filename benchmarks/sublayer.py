@@ -1,15 +1,21 @@
 """Paper Fig. 12 — sub-layer (L1–L4) speedups of CAIS over each baseline,
-plus a measured fused-block-vs-split cell: the whole-block dataflow graph
-(``sp_block``, one shard_map, pass-2 seam fusion) against the PR-1
-per-sub-layer composition (``sp_attention`` + ``sp_ffn``), wall-clock on an
-8-virtual-device ring (subprocess — the parent keeps one device)."""
+plus measured cells on an 8-virtual-device ring (subprocess — the parent
+keeps one device): the whole-block dataflow graph (``sp_block``, one
+shard_map, pass-2 seam fusion) against the PR-1 per-sub-layer composition
+(``sp_attention`` + ``sp_ffn``), and the period-level graph (``sp_period``,
+2 blocks in ONE shard_map with the cross-block seam fused) against the
+per-block ``sp_block`` composition. With ``$REPRO_BENCH_JSON`` set, every
+row (including the subprocess cells) is dumped as the JSON baseline the CI
+slow-suite commits as ``BENCH_pr3.json``."""
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
+import tempfile
 
-from benchmarks.common import emit
+from benchmarks.common import dump_rows_json, emit, record
 from repro.core import perfsim as ps
 
 _CHILD = "_REPRO_SUBLAYER_BLOCK_CHILD"
@@ -34,6 +40,9 @@ def _block_child() -> None:
     params = tr.init_block(jax.random.key(0), "attn", cfg, jnp.float32)
     x = jax.random.normal(jax.random.key(1), (2, S, d), jnp.float32)
 
+    params2 = [tr.init_block(jax.random.key(i), "attn", cfg, jnp.float32)
+               for i in (0, 2)]
+
     for mode in ("barrier", "cais"):
         tpc = tp_mod.TPContext(mesh=mesh, backend=mode,
                                cais=CAISConfig(num_chunks=2))
@@ -56,23 +65,48 @@ def _block_child() -> None:
         emit(f"block.fused_vs_split.{mode}", t_fused,
              f"split_us={t_split:.0f} speedup={t_split / t_fused:.2f}x")
 
+        # period-level graph (2 blocks, ONE shard_map, cross-block pass-2
+        # seam fusion) vs the per-block sp_block composition
+        period = jax.jit(
+            lambda x, tpc=tpc: tp_mod.sp_period(
+                tpc, x, params2, cfg, ("attn", "attn"))[0])
+
+        def per_block(x, tpc=tpc):
+            for p in params2:
+                x, _ = tp_mod.sp_block(tpc, x, p, cfg, "attn")
+            return x
+
+        t_period = time_fn(period, x)
+        t_pb = time_fn(jax.jit(per_block), x)
+        emit(f"period.graph_vs_perblock.{mode}", t_period,
+             f"perblock_us={t_pb:.0f} speedup={t_pb / t_period:.2f}x")
+
 
 def run() -> None:
     if os.environ.get(_CHILD):
         _block_child()
+        dump_rows_json()        # child rows → the path the parent hands us
         return
-    # measured cell first (subprocess owns the 8-device override)
+    # measured cell first (subprocess owns the 8-device override). The
+    # child dumps its rows as JSON to a temp path; the parent merges them so
+    # dump_rows_json() ($REPRO_BENCH_JSON) covers the measured cells too.
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env[_CHILD] = "1"
     env.setdefault("PYTHONPATH", "src")
-    out = subprocess.run(
-        [sys.executable, "-c", "from benchmarks.sublayer import run; run()"],
-        capture_output=True, text=True, env=env, timeout=1200)
-    sys.stdout.write(out.stdout)
-    if out.returncode != 0:
-        sys.stderr.write(out.stderr[-2000:])
-        raise RuntimeError("fused-block bench failed")
+    with tempfile.TemporaryDirectory() as td:
+        env["REPRO_BENCH_JSON"] = os.path.join(td, "child-rows.json")
+        out = subprocess.run(
+            [sys.executable, "-c",
+             "from benchmarks.sublayer import run; run()"],
+            capture_output=True, text=True, env=env, timeout=1200)
+        sys.stdout.write(out.stdout)
+        if out.returncode != 0:
+            sys.stderr.write(out.stderr[-2000:])
+            raise RuntimeError("fused-block bench failed")
+        with open(env["REPRO_BENCH_JSON"]) as fh:
+            for row in json.load(fh):
+                record(row["name"], row["us_per_call"], row["derived"])
 
     f = ps.calibrated_fabric()
     for cfg in ps.PAPER_MODELS:
@@ -84,6 +118,7 @@ def run() -> None:
                 t, _ = ps.run_sublayer(cfg, ps.BASELINES[name], f, which)
                 emit(f"fig12.{cfg.name}.{which}.CAIS_over_{name}",
                      t_cais * 1e6, f"speedup={t / t_cais:.2f}x")
+    dump_rows_json()
 
 
 if __name__ == "__main__":

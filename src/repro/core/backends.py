@@ -2,7 +2,8 @@
 
 Every tensor-parallel collective-fused schedule the model path can run —
 AG→GEMM, GEMM→RS, GEMM→AR, the expert all-to-all, the fused RS+LN+AG
-sub-layer chain, and the asymmetric dual-stream overlap — is reached through
+sub-layer chain (and its gather-less RS+LN prefix for the MoE router seam),
+and the asymmetric dual-stream overlap — is reached through
 one seam: a :class:`CollectiveBackend` instance looked up by name in a
 process-global registry. ``repro.core.tp`` and ``repro.core.dataflow.execute``
 dispatch through the backend instead of branching on mode strings, so adding
@@ -127,6 +128,19 @@ class CollectiveBackend:
         zn = apply_norm(norm, {"scale": ln_scale}, z)
         return self.ag_gemm_multi(zn, tuple(ws2), axis, cais), z
 
+    def fused_rs_ln(self, x, w1, ln_scale, axis: str, cais: CAISConfig,
+                    norm: str = "rmsnorm", residual=None):
+        """GEMM-RS -> (+res) -> LN with no trailing gather — the MoE
+        attention-out → router seam (the next collective is the expert
+        all-to-all). Returns (normed, z). Default: composed from the
+        backend's own ``gemm_rs``, so custom backends get it for free."""
+        from repro.models.layers import apply_norm
+
+        z = self.gemm_rs(x, w1, axis, cais)
+        if residual is not None:
+            z = z + residual
+        return apply_norm(norm, {"scale": ln_scale}, z), z
+
     # -- asymmetric dual-stream overlap ----------------------------------
     def overlap_asymmetric(self, rs_args, ag_args, axis: str,
                            cais: CAISConfig):
@@ -219,6 +233,12 @@ class CAISBackend(CollectiveBackend):
         return prim.gemm_rs(x, w, axis, cais)
 
     def gemm_ar(self, x, w, axis, cais):
+        # the decomposed RS+AG schedule sequence-shards the payload around
+        # the ring; a ragged/decode sequence (S % ring != 0, e.g. S=1) can't
+        # split, so THIS collective falls back to the monolithic allreduce
+        # while the rest of the graph keeps the cais schedules
+        if int(x.shape[1]) % self._ring(axis, cais) != 0:
+            return prim.barrier_gemm_ar(x, w, axis)
         return prim.gemm_ar(x, w, axis, cais)
 
     def a2a_expert_ffn(self, send, ffn, axis, cais):
@@ -249,6 +269,18 @@ class CAISBackend(CollectiveBackend):
         return super().fused_rs_ln_ag_multi(x, w1, ln_scale, tuple(ws2),
                                             axis, cais, norm=norm,
                                             residual=residual)
+
+    def fused_rs_ln(self, x, w1, ln_scale, axis, cais,
+                    norm="rmsnorm", residual=None):
+        # plan for the RS leg like fused_rs_ln_ag: the z payload the ring
+        # moves is (B, S, d) with d = w1 cols
+        n = self._ring(axis, cais)
+        itemsize = np.dtype(x.dtype).itemsize
+        z_bytes = int(x.shape[0]) * int(x.shape[1]) * int(w1.shape[1]) * \
+            itemsize
+        cais = self._resolve(cais, z_bytes, n)
+        return super().fused_rs_ln(x, w1, ln_scale, axis, cais, norm=norm,
+                                   residual=residual)
 
     def overlap_asymmetric(self, rs_args, ag_args, axis, cais):
         # no _resolve: the lockstep schedule moves one S_loc slice per hop

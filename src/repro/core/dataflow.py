@@ -1,6 +1,8 @@
 """Graph-level dataflow optimizer (paper §III-C).
 
-A small dataflow IR over whole TP transformer blocks plus fusion passes.
+A small dataflow IR over TP transformer blocks — and, since the period-level
+refactor, over whole ``layer_pattern`` *periods* (≥1 blocks chained into one
+graph, see :func:`repro.core.tp.sp_period`) — plus fusion passes.
 
 Op vocabulary (and which optimizer pass consumes each op)
 ---------------------------------------------------------
@@ -50,11 +52,25 @@ Fused ops (produced by ``optimize``, executed via the backend):
 ``fused_rs_ln_ag`` / ``fused_rs_ln_ag_multi``
     Deep fusion of the ``gemm_rs → [add|residual] → layernorm →
     ag_gemm[_multi]`` sub-layer seam (Fig. 9) — the whole-block graph's
-    attention-out → FFN-in chain. Produced by pass 2 (terminal).
+    attention-out → FFN-in chain, and (in a period graph) the block→block
+    seam: block k's FFN-out RS → residual → block k+1's LN1 → QKV shared
+    gather. Produced by pass 2 (terminal).
+``fused_rs_ln``
+    The gather-less prefix of the same seam: ``gemm_rs → [add|residual] →
+    layernorm`` whose normed value feeds a ``route`` node (the MoE
+    attention-out → router seam) — the trailing collective is the expert
+    all-to-all, not an allgather, so only the RS + add + norm fuse. Outputs
+    ``(normed, z)``; produced by pass 2 (terminal), executed via
+    ``CollectiveBackend.fused_rs_ln``.
 ``overlap_asym``
     Co-scheduled independent ``gemm_rs`` + ``ag_gemm[_multi]`` pair with
     complementary ring directions (asymmetric kernel overlapping,
     Fig. 9e/10). Produced by pass 3 (``pair_asymmetric``, terminal).
+    Pairing is deterministic and nearest-independent-pair-first: candidate
+    pairs are ranked by topological distance (ties: earliest position, then
+    node names), so a merged microbatch/period graph picks the adjacent
+    seam — one chain's FFN-out RS against the *nearest* independent
+    attention gather — rather than an arbitrary first match.
 
 The executor runs a graph either as pure math (no mesh; reference) or inside
 ``shard_map`` (explicit TP), dispatching every fused collective op through a
@@ -101,6 +117,7 @@ from repro.core.primitives import CAISConfig
 # fused_rs_ln_ag       (x: feat[, res:seq])  (w1, scale, w2) feat (+ seq z)
 # fused_rs_ln_ag_multi (x: feat[, res:seq])  (w1, scale, w...) feat per w
 #                                                             (+ seq z)
+# fused_rs_ln          (x: feat[, res:seq])  (w1, scale)     (seq zn, seq z)
 # overlap_asym         (x_rs: feat, x_ag: seq) (w_rs, w_ag...) (seq, feat...)
 
 VALID_OPS = {
@@ -108,7 +125,7 @@ VALID_OPS = {
     "allreduce", "layernorm", "add", "residual", "custom",
     "route", "unroute", "a2a_ffn",
     "ag_gemm", "ag_gemm_multi", "gemm_rs", "gemm_ar", "fused_rs_ln_ag",
-    "fused_rs_ln_ag_multi", "overlap_asym",
+    "fused_rs_ln_ag_multi", "fused_rs_ln", "overlap_asym",
 }
 
 # local-math ops whose semantics live in the node's `fn`
@@ -264,8 +281,14 @@ def fuse_shared_gather(g: Graph) -> Graph:
 def fuse_sublayer_chain(g: Graph) -> Graph:
     """Pass 2: gemm_rs → [add|residual] → layernorm → ag_gemm[_multi] ⇒ one
     pipeline. The post-add value may have *several* consumers (in a
-    whole-block graph it feeds both the next LN and the next residual add):
-    the fused op re-exposes it, so only the layernorm leg is swallowed."""
+    whole-block graph it feeds both the next LN and the next residual add;
+    in a period graph the block→block seam looks the same): the fused op
+    re-exposes it, so only the layernorm leg is swallowed.
+
+    MoE variant: when the normed value feeds a ``route`` node instead of a
+    gather (attention-out RS → residual → LN → router), the gather-less
+    prefix fuses into ``fused_rs_ln``, which re-exposes BOTH the normed
+    value (for route/unroute/dense-residual consumers) and z."""
     nodes = list(g.nodes)
     for rs in list(nodes):
         if rs.op != "gemm_rs":
@@ -290,20 +313,29 @@ def fuse_sublayer_chain(g: Graph) -> Graph:
         if nxt is None or nxt.op != "layernorm":
             continue
         ln = nxt
-        ag = _single_consumer(g, ln.name)
-        if ag is None or ag.op not in ("ag_gemm", "ag_gemm_multi"):
-            continue
         ins = rs.inputs + ((residual,) if residual else ())
         z_name = (add_node or rs).name
-        if ag.op == "ag_gemm":
-            fused = Node(ag.name, "fused_rs_ln_ag", ins,
-                         rs.weights + ln.weights + ag.weights,
-                         outputs=(ag.name, z_name))
+        drop = {rs.name, ln.name} | ({add_node.name} if add_node else set())
+        ag = _single_consumer(g, ln.name)
+        if ag is not None and ag.op in ("ag_gemm", "ag_gemm_multi"):
+            if ag.op == "ag_gemm":
+                fused = Node(ag.name, "fused_rs_ln_ag", ins,
+                             rs.weights + ln.weights + ag.weights,
+                             outputs=(ag.name, z_name))
+            else:
+                fused = Node(ag.name, "fused_rs_ln_ag_multi", ins,
+                             rs.weights + ln.weights + ag.weights,
+                             outputs=ag.outputs + (z_name,))
+            drop.add(ag.name)
+        elif any(c.op == "route" for c in g.consumers(ln.name)):
+            # the normed value feeds an expert router (and usually also the
+            # unroute scatter / a dense-residual MLP) — fuse the RS + add +
+            # norm and re-expose the normed value under its old name
+            fused = Node(ln.name, "fused_rs_ln", ins,
+                         rs.weights + ln.weights,
+                         outputs=(ln.name, z_name))
         else:
-            fused = Node(ag.name, "fused_rs_ln_ag_multi", ins,
-                         rs.weights + ln.weights + ag.weights,
-                         outputs=ag.outputs + (z_name,))
-        drop = {rs.name, ln.name, ag.name} | ({add_node.name} if add_node else set())
+            continue
         nodes = [x for x in nodes if x.name not in drop] + [fused]
         return fuse_sublayer_chain(Graph(_topo(nodes, g.outputs), g.outputs))
     return Graph(_topo(nodes, g.outputs), g.outputs)
@@ -312,8 +344,19 @@ def fuse_sublayer_chain(g: Graph) -> Graph:
 def pair_asymmetric(g: Graph) -> Graph:
     """Pass 3: co-schedule an independent gemm_rs + ag_gemm[_multi] pair so
     their complementary ring directions share the links each step (e.g. one
-    microbatch's FFN-out RS against another's attention-in gather)."""
-    nodes = list(g.nodes)
+    microbatch's FFN-out RS against another's attention-in gather).
+
+    Pairing policy (deterministic, nearest-independent-pair-first): every
+    candidate (gemm_rs, ag_gemm[_multi]) pair with no dependency path either
+    way is ranked by topological distance, ties broken by earliest topo
+    position and then by node name — so a merged microbatch/period graph
+    co-schedules the *adjacent* seam (chain k's FFN-out RS with the nearest
+    independent attention gather of chain k+1) instead of whatever pair node
+    order happened to surface first. Repeats until no independent pair
+    remains; the result is a fixed point of the pass."""
+    nodes = _topo(list(g.nodes), g.outputs)
+    order = {n.name: i for i, n in enumerate(nodes)}
+    best = None
     for a in nodes:
         if a.op != "gemm_rs":
             continue
@@ -322,13 +365,19 @@ def pair_asymmetric(g: Graph) -> Graph:
                 continue
             if g.reaches(a.name, b.name) or g.reaches(b.name, a.name):
                 continue
-            fused = Node(f"{a.name}+{b.name}", "overlap_asym",
-                         a.inputs + b.inputs, a.weights + b.weights,
-                         outputs=(a.name,) + b.outputs)
-            nodes = [x for x in nodes if x.name not in (a.name, b.name)]
-            nodes.append(fused)
-            return pair_asymmetric(Graph(_topo(nodes, g.outputs), g.outputs))
-    return Graph(_topo(nodes, g.outputs), g.outputs)
+            key = (abs(order[a.name] - order[b.name]),
+                   min(order[a.name], order[b.name]), a.name, b.name)
+            if best is None or key < best[0]:
+                best = (key, a, b)
+    if best is None:
+        return Graph(nodes, g.outputs)
+    _, a, b = best
+    fused = Node(f"{a.name}+{b.name}", "overlap_asym",
+                 a.inputs + b.inputs, a.weights + b.weights,
+                 outputs=(a.name,) + b.outputs)
+    nodes = [x for x in nodes if x.name not in (a.name, b.name)]
+    nodes.append(fused)
+    return pair_asymmetric(Graph(_topo(nodes, g.outputs), g.outputs))
 
 
 def optimize(g: Graph, asymmetric: bool = True) -> Graph:
@@ -478,6 +527,18 @@ def execute(g: Graph, values: Dict[str, jnp.ndarray],
                 outs = tuple(zn @ w for w in ws2)
             for name, val in zip(n.outputs, outs + (z,)):
                 env[name] = val
+        elif n.op == "fused_rs_ln":
+            w1, scale = ws
+            res = env[n.inputs[1]] if len(n.inputs) > 1 else None
+            if dist:
+                zn, z = be.fused_rs_ln(ins[0], w1, scale, axis, cais,
+                                       norm=norm, residual=res)
+            else:
+                z = ins[0] @ w1
+                if res is not None:
+                    z = z + res
+                zn = apply_norm(norm, {"scale": scale}, z)
+            env[n.outputs[0]], env[n.outputs[1]] = zn, z
         elif n.op == "overlap_asym":
             w_rs = ws[0]
             ag_ws = tuple(ws[1:])
@@ -519,18 +580,31 @@ def sublayer_graph() -> Graph:
 
 
 def merge_graphs(graphs: Sequence[Graph],
-                 prefixes: Optional[Sequence[str]] = None) -> Graph:
+                 prefixes: Optional[Sequence[str]] = None,
+                 share_weights: bool = False) -> Graph:
     """Disjoint union of several graphs with value/node renaming — e.g. two
-    microbatches of the same transformer block, so cross-graph passes
-    (``pair_asymmetric``) can co-schedule collectives across them. Weight
-    keys are NOT renamed: merged graphs share one weights dict (the
-    microbatches run the same block parameters)."""
+    microbatches of the same transformer block, or consecutive *different*
+    blocks of a period, so cross-graph passes (``pair_asymmetric``) can
+    co-schedule collectives across them.
+
+    Weight keys are prefixed exactly like values by default, so merging
+    graphs of different blocks cannot silently alias ``wq``/``w_up``/…
+    across blocks. Pass ``share_weights=True`` for the same-params
+    microbatch case: weight keys are left unrenamed and every merged copy
+    reads one shared weights dict. Duplicate prefixes would make the
+    renaming collide (unintended weight-key/value aliasing) and raise
+    :class:`GraphError` up front."""
     if prefixes is None:
         prefixes = [f"mb{i}." for i in range(len(graphs))]
     if len(prefixes) != len(graphs):
         raise GraphError(
             f"merge_graphs got {len(graphs)} graphs but "
             f"{len(prefixes)} prefixes")
+    if len(set(prefixes)) != len(prefixes):
+        dup = sorted(p for p in set(prefixes) if list(prefixes).count(p) > 1)
+        raise GraphError(
+            f"merge_graphs got duplicate prefix {dup[0]!r}: node and weight "
+            f"renaming would collide across the merged graphs")
     nodes: List[Node] = []
     outs: List[str] = []
     for g, p in zip(graphs, prefixes):
@@ -538,7 +612,9 @@ def merge_graphs(graphs: Sequence[Graph],
             nodes.append(dataclasses.replace(
                 n, name=p + n.name,
                 inputs=tuple(p + v for v in n.inputs),
-                outputs=tuple(p + v for v in n.outputs)))
+                outputs=tuple(p + v for v in n.outputs),
+                weights=(n.weights if share_weights
+                         else tuple(p + w for w in n.weights))))
         outs.extend(p + o for o in g.outputs)
     return Graph(nodes, tuple(outs))
 

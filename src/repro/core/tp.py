@@ -15,11 +15,17 @@ chain fusion, asymmetric pairing), and ``execute()`` the optimized graph
 inside ``shard_map`` — so new fusion rules land in the transformer without
 touching the sub-layers. The unit of execution is the sub-layer chain the
 paper evaluates (L1–L4): [attention out-GEMM →RS] + LN + [AG→ FFN GEMMs].
+
+The model path executes at *period* scope (:func:`sp_period`): every block
+of a ``cfg.layer_pattern`` period concatenates into ONE graph run in ONE
+``shard_map``, so the optimizer also sees the block→block seams —
+cross-block RS→residual→LN→AG fusion (pass 2) and deterministic asymmetric
+pairing (pass 3) fire inside ``stack_forward``, not just in tests.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Union
+from typing import Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -79,28 +85,37 @@ def _smap(tpc: TPContext, fn, in_specs, out_specs):
 
 
 def _ffn_chain_nodes(src: str, out: str, has_gate: bool, act: str,
-                     tag: str = "") -> list:
+                     tag: str = "", p: str = "",
+                     seq_sharded: bool = True) -> list:
     """AG → GEMM(up[, gate]) → act[(·)] → GEMM(down) → RS nodes from value
     ``src`` to value ``out`` (weight keys w_up/w_gate/w_down); ``tag``
-    uniquifies node names when the chain is embedded in a larger graph."""
+    uniquifies node names when the chain is embedded in a larger graph and
+    ``p`` namespaces node names AND weight keys (period graphs, one prefix
+    per block). With ``seq_sharded=False`` (decode-style TP: the activation
+    is replicated, not sequence-sharded) the gather is skipped and the chain
+    ends in an allreduce instead of a reduce-scatter."""
     from repro.models.layers import activation
 
-    ag, up, gate, h, down = (f"agx{tag}", f"up{tag}", f"gate{tag}",
-                             f"h{tag}", f"down{tag}")
-    nodes = [
-        df.Node(ag, "allgather", (src,)),
-        df.Node(up, "gemm_col", (ag,), ("w_up",)),
-    ]
+    ag, up, gate, h, down = (f"{p}agx{tag}", f"{p}up{tag}", f"{p}gate{tag}",
+                             f"{p}h{tag}", f"{p}down{tag}")
+    nodes = []
+    if seq_sharded:
+        nodes.append(df.Node(ag, "allgather", (src,)))
+        gin = ag
+    else:
+        gin = src
+    nodes.append(df.Node(up, "gemm_col", (gin,), (p + "w_up",)))
     if has_gate:
-        nodes.append(df.Node(gate, "gemm_col", (ag,), ("w_gate",)))
+        nodes.append(df.Node(gate, "gemm_col", (gin,), (p + "w_gate",)))
         nodes.append(df.Node(h, "custom", (up, gate),
                              fn=lambda u, g: activation(act, g) * u))
     else:
         nodes.append(df.Node(h, "custom", (up,),
                              fn=lambda u: activation(act, u)))
     nodes += [
-        df.Node(down, "gemm_row", (h,), ("w_down",)),
-        df.Node(out, "reduce_scatter", (down,)),
+        df.Node(down, "gemm_row", (h,), (p + "w_down",)),
+        df.Node(out, "reduce_scatter" if seq_sharded else "allreduce",
+                (down,)),
     ]
     return nodes
 
@@ -136,26 +151,77 @@ def attention_sublayer_graph(core_fn: Callable) -> df.Graph:
 
 
 # ---------------------------------------------------------------------------
-# Whole-block dataflow graphs: attention residual → FFN/MoE residual in ONE
-# graph, so pass 2 fuses the rs→ln→ag seam between the sub-layers and pass 3
+# Block graph fragments: attention residual → FFN/MoE residual as namespaced
+# node lists that chain into whole-block and whole-PERIOD graphs, so pass 2
+# fuses the rs→ln→ag seams between sub-layers AND between blocks, and pass 3
 # can co-schedule collectives across independent chains (microbatches).
 # ---------------------------------------------------------------------------
 
 
-def _attention_block_nodes(core_fn: Callable) -> list:
-    """x → LN1 → AG → QKV → core → out-GEMM → RS → +x residual (value r1)."""
-    return [
-        df.Node("x", "input"),
-        df.Node("ln1", "layernorm", ("x",), ("scale1",)),
-        df.Node("agx1", "allgather", ("ln1",)),
-        df.Node("q", "gemm_col", ("agx1",), ("wq",)),
-        df.Node("k", "gemm_col", ("agx1",), ("wk",)),
-        df.Node("v", "gemm_col", ("agx1",), ("wv",)),
-        df.Node("o", "custom", ("q", "k", "v"), fn=core_fn),
-        df.Node("proj", "gemm_row", ("o",), ("wo",)),
-        df.Node("rs1", "reduce_scatter", ("proj",)),
-        df.Node("r1", "residual", ("rs1", "x")),
+def _attention_block_nodes(core_fn: Callable, p: str = "", src: str = "x",
+                           seq_sharded: bool = True) -> list:
+    """src → LN1 → [AG →] QKV → core → out-GEMM → RS|AR → +src residual
+    (value ``{p}r1``). ``p`` namespaces node names and weight keys; with
+    ``seq_sharded=False`` the gather is skipped (replicated activation) and
+    the out-projection reduces with an allreduce."""
+    nodes = [df.Node(f"{p}ln1", "layernorm", (src,), (f"{p}scale1",))]
+    if seq_sharded:
+        nodes.append(df.Node(f"{p}agx1", "allgather", (f"{p}ln1",)))
+        gin = f"{p}agx1"
+    else:
+        gin = f"{p}ln1"
+    nodes += [
+        df.Node(f"{p}q", "gemm_col", (gin,), (f"{p}wq",)),
+        df.Node(f"{p}k", "gemm_col", (gin,), (f"{p}wk",)),
+        df.Node(f"{p}v", "gemm_col", (gin,), (f"{p}wv",)),
+        df.Node(f"{p}o", "custom", (f"{p}q", f"{p}k", f"{p}v"), fn=core_fn),
+        df.Node(f"{p}proj", "gemm_row", (f"{p}o",), (f"{p}wo",)),
+        df.Node(f"{p}rs1", "reduce_scatter" if seq_sharded else "allreduce",
+                (f"{p}proj",)),
+        df.Node(f"{p}r1", "residual", (f"{p}rs1", src)),
     ]
+    return nodes
+
+
+def _dense_block_nodes(core_fn: Callable, has_gate: bool, act: str,
+                       p: str = "", src: str = "x",
+                       seq_sharded: bool = True):
+    """One dense block as a graph fragment: returns (nodes, out_value)."""
+    nodes = _attention_block_nodes(core_fn, p, src, seq_sharded) + [
+        df.Node(f"{p}ln2", "layernorm", (f"{p}r1",), (f"{p}scale2",)),
+    ] + _ffn_chain_nodes(f"{p}ln2", f"{p}rs2", has_gate, act, tag="2", p=p,
+                         seq_sharded=seq_sharded) + [
+        df.Node(f"{p}r2", "residual", (f"{p}rs2", f"{p}r1")),
+    ]
+    return nodes, f"{p}r2"
+
+
+def _moe_block_nodes(core_fn: Callable, route_fn: Callable,
+                     expert_fn: Callable, unroute_fn: Callable,
+                     expert_weights: tuple,
+                     dense_fn: Optional[Callable] = None,
+                     dense_weights: tuple = (), p: str = "",
+                     src: str = "x"):
+    """One MoE block as a graph fragment: returns (nodes, out_value,
+    aux_value). ``expert_weights``/``dense_weights`` are the (already
+    namespaced) weight keys of the expert FFN / dense-residual MLP."""
+    nodes = _attention_block_nodes(core_fn, p, src) + [
+        df.Node(f"{p}ln2", "layernorm", (f"{p}r1",), (f"{p}scale2",)),
+        df.Node(f"{p}moe_route", "route", (f"{p}ln2",), (f"{p}router",),
+                outputs=(f"{p}send", f"{p}combine", f"{p}aux"), fn=route_fn),
+        df.Node(f"{p}eout", "a2a_ffn", (f"{p}send",), expert_weights,
+                fn=expert_fn),
+        df.Node(f"{p}y", "unroute", (f"{p}eout", f"{p}combine", f"{p}ln2"),
+                fn=unroute_fn),
+    ]
+    top = f"{p}y"
+    if dense_fn is not None:
+        nodes.append(df.Node(f"{p}dmlp", "custom", (f"{p}ln2",),
+                             dense_weights, fn=dense_fn))
+        nodes.append(df.Node(f"{p}ymoe", "add", (top, f"{p}dmlp")))
+        top = f"{p}ymoe"
+    nodes.append(df.Node(f"{p}r2", "residual", (top, f"{p}r1")))
+    return nodes, f"{p}r2", f"{p}aux"
 
 
 def dense_block_graph(core_fn: Callable, has_gate: bool, act: str) -> df.Graph:
@@ -163,12 +229,24 @@ def dense_block_graph(core_fn: Callable, has_gate: bool, act: str) -> df.Graph:
     the attention-out RS, the residual add, LN2, and the FFN input gather
     collapse into one ``fused_rs_ln_ag[_multi]`` pipeline (pass 2) — the
     cross-sub-layer seam a per-sub-layer graph can never see."""
-    nodes = _attention_block_nodes(core_fn) + [
-        df.Node("ln2", "layernorm", ("r1",), ("scale2",)),
-    ] + _ffn_chain_nodes("ln2", "rs2", has_gate, act, tag="2") + [
-        df.Node("r2", "residual", ("rs2", "r1")),
-    ]
-    return df.Graph(nodes, outputs=("r2",))
+    nodes, out = _dense_block_nodes(core_fn, has_gate, act)
+    return df.Graph([df.Node("x", "input")] + nodes, outputs=(out,))
+
+
+def dense_period_graph(core_fns: Sequence[Callable], has_gate: bool,
+                       act: str) -> df.Graph:
+    """One Graph for a PERIOD of dense blocks (one core_fn per block),
+    chained through per-block ``b{i}.`` namespaces. With ≥2 blocks the
+    optimizer sees the block→block seam: block k's FFN-out RS → residual →
+    block k+1's LN1 → QKV shared gather fuses into one cross-block
+    ``fused_rs_ln_ag_multi`` (pass 2)."""
+    nodes = [df.Node("x", "input")]
+    src = "x"
+    for i, core_fn in enumerate(core_fns):
+        ns, src = _dense_block_nodes(core_fn, has_gate, act, p=f"b{i}.",
+                                     src=src)
+        nodes += ns
+    return df.Graph(nodes, outputs=(src,))
 
 
 def moe_block_graph(core_fn: Callable, route_fn: Callable,
@@ -179,22 +257,13 @@ def moe_block_graph(core_fn: Callable, route_fn: Callable,
     """One Graph for a whole MoE transformer block: the expert path runs as
     ``route → a2a_ffn → unroute`` IR nodes, with ``a2a_ffn`` dispatched
     through ``CollectiveBackend.a2a_expert_ffn``. ``dense_fn`` adds the
-    Arctic-style parallel dense-residual MLP as a ``custom`` node."""
-    nodes = _attention_block_nodes(core_fn) + [
-        df.Node("ln2", "layernorm", ("r1",), ("scale2",)),
-        df.Node("moe_route", "route", ("ln2",), ("router",),
-                outputs=("send", "combine", "aux"), fn=route_fn),
-        df.Node("eout", "a2a_ffn", ("send",), expert_weights, fn=expert_fn),
-        df.Node("y", "unroute", ("eout", "combine", "ln2"), fn=unroute_fn),
-    ]
-    top = "y"
-    if dense_fn is not None:
-        nodes.append(df.Node("dmlp", "custom", ("ln2",), dense_weights,
-                             fn=dense_fn))
-        nodes.append(df.Node("ymoe", "add", ("y", "dmlp")))
-        top = "ymoe"
-    nodes.append(df.Node("r2", "residual", (top, "r1")))
-    return df.Graph(nodes, outputs=("r2", "aux"))
+    Arctic-style parallel dense-residual MLP as a ``custom`` node. Pass 2
+    fuses the attention-out RS → residual → LN2 → router seam into
+    ``fused_rs_ln`` (the trailing collective is the expert all-to-all)."""
+    nodes, out, aux = _moe_block_nodes(core_fn, route_fn, expert_fn,
+                                       unroute_fn, expert_weights,
+                                       dense_fn, dense_weights)
+    return df.Graph([df.Node("x", "input")] + nodes, outputs=(out, aux))
 
 
 # ---------------------------------------------------------------------------
@@ -427,19 +496,15 @@ def _moe_graph_fns(cfg, tp: int, has_gate: bool):
     return route_fn, expert_fn, unroute_fn
 
 
-def sp_block(tpc: TPContext, x, params, cfg, kind: str = "attn",
-             prefix_len: int = 0, norm_kind: str = "rmsnorm"):
-    """A whole pre-norm transformer block — attention residual → FFN/MoE
-    residual — built as ONE dataflow graph, optimized, and executed in ONE
-    ``shard_map``. Unlike the per-sub-layer path (``sp_attention`` +
-    ``sp_ffn``/``sp_moe_ffn``), the graph spans the attention-out → FFN-in
-    seam, so pass 2 fuses RS → residual → LN → AG into one pipeline on every
-    dense block and MoE routing flows through the same IR.
-
-    ``params`` is the block param dict from ``models.transformer.init_block``
-    (``norm1``/``mixer``/``norm2``/``ffn``). x: (B, S, d) sequence-sharded.
-    Returns (block output, aux loss)."""
-    dtype = x.dtype
+def _block_graph_fragment(tpc: TPContext, params, cfg, kind: str, idx: int,
+                          src: str, prefix_len: int = 0,
+                          dtype=jnp.float32, seq_sharded: bool = True):
+    """One transformer block as a period-graph fragment: nodes chained from
+    value ``src``, every node name and weight key namespaced ``b{idx}.``.
+    Returns (nodes, out_value, aux_value_or_None, weights, specs) —
+    ``weights`` maps the namespaced keys to local param arrays and ``specs``
+    to their shard_map PartitionSpec entries."""
+    p = f"b{idx}."
     tp = tpc.tp
     m = params["mixer"]
     kv_sharded = cfg.num_kv_heads % tp == 0
@@ -448,39 +513,43 @@ def sp_block(tpc: TPContext, x, params, cfg, kind: str = "attn",
 
     kv_spec = (None, MODEL) if kv_sharded else (None, None)
     weights = {
-        "scale1": params["norm1"]["scale"].astype(dtype),
-        "wq": m["wq"].astype(dtype), "wk": m["wk"].astype(dtype),
-        "wv": m["wv"].astype(dtype), "wo": m["wo"].astype(dtype),
-        "scale2": params["norm2"]["scale"].astype(dtype),
+        p + "scale1": params["norm1"]["scale"].astype(dtype),
+        p + "wq": m["wq"].astype(dtype), p + "wk": m["wk"].astype(dtype),
+        p + "wv": m["wv"].astype(dtype), p + "wo": m["wo"].astype(dtype),
+        p + "scale2": params["norm2"]["scale"].astype(dtype),
     }
     specs = {
-        "scale1": (None,), "wq": (None, MODEL), "wk": kv_spec,
-        "wv": kv_spec, "wo": (MODEL, None), "scale2": (None,),
+        p + "scale1": (None,), p + "wq": (None, MODEL), p + "wk": kv_spec,
+        p + "wv": kv_spec, p + "wo": (MODEL, None), p + "scale2": (None,),
     }
 
     f = params["ffn"]
     has_gate = "w_gate" in f
     moe = cfg.moe is not None
     if moe:
+        assert seq_sharded, \
+            "MoE blocks run only on the sequence-sharded period path"
         assert cfg.moe.num_experts % tp == 0, \
             "sp_block MoE path requires E % tp == 0 (see tp_applicable)"
         route_fn, expert_fn, unroute_fn = _moe_graph_fns(cfg, tp, has_gate)
-        weights["router"] = f["router"]                 # stays float32
-        specs["router"] = (None, None)
-        e_keys = ("w_up",) + (("w_gate",) if has_gate else ()) + ("w_down",)
+        weights[p + "router"] = f["router"]             # stays float32
+        specs[p + "router"] = (None, None)
+        e_keys = tuple(p + kk for kk in ("w_up",)
+                       + (("w_gate",) if has_gate else ()) + ("w_down",))
         for kkey in e_keys:
-            weights[kkey] = f[kkey].astype(dtype)
+            weights[kkey] = f[kkey[len(p):]].astype(dtype)
             specs[kkey] = (MODEL, None, None)
         dense_fn, d_keys = None, ()
         if cfg.moe.dense_residual_d_ff:
             dm = f["dense"]
             dense_gate = "w_gate" in dm
-            d_keys = ("d_up",) + (("d_gate",) if dense_gate else ()) + \
-                ("d_down",)
-            weights["d_up"] = dm["w_up"].astype(dtype)
+            d_keys = tuple(p + kk for kk in ("d_up",)
+                           + (("d_gate",) if dense_gate else ())
+                           + ("d_down",))
+            weights[p + "d_up"] = dm["w_up"].astype(dtype)
             if dense_gate:
-                weights["d_gate"] = dm["w_gate"].astype(dtype)
-            weights["d_down"] = dm["w_down"].astype(dtype)
+                weights[p + "d_gate"] = dm["w_gate"].astype(dtype)
+            weights[p + "d_down"] = dm["w_down"].astype(dtype)
             for kkey in d_keys:
                 specs[kkey] = (None, None)
             from repro.models.layers import activation
@@ -495,35 +564,91 @@ def sp_block(tpc: TPContext, x, params, cfg, kind: str = "attn",
                     h = activation(cfg.act, h)
                 return h @ dd
 
-        graph = moe_block_graph(core, route_fn, expert_fn, unroute_fn,
-                                e_keys, has_gate, dense_fn=dense_fn,
-                                dense_weights=d_keys)
+        nodes, out, aux = _moe_block_nodes(core, route_fn, expert_fn,
+                                           unroute_fn, e_keys, dense_fn,
+                                           d_keys, p=p, src=src)
     else:
-        graph = dense_block_graph(core, has_gate, cfg.act)
-        weights["w_up"] = f["w_up"].astype(dtype)
-        specs["w_up"] = (None, MODEL)
+        nodes, out = _dense_block_nodes(core, has_gate, cfg.act, p=p,
+                                        src=src, seq_sharded=seq_sharded)
+        aux = None
+        weights[p + "w_up"] = f["w_up"].astype(dtype)
+        specs[p + "w_up"] = (None, MODEL)
         if has_gate:
-            weights["w_gate"] = f["w_gate"].astype(dtype)
-            specs["w_gate"] = (None, MODEL)
-        weights["w_down"] = f["w_down"].astype(dtype)
-        specs["w_down"] = (MODEL, None)
+            weights[p + "w_gate"] = f["w_gate"].astype(dtype)
+            specs[p + "w_gate"] = (None, MODEL)
+        weights[p + "w_down"] = f["w_down"].astype(dtype)
+        specs[p + "w_down"] = (MODEL, None)
+    return nodes, out, aux, weights, specs
 
-    graph = df.optimize(graph)
+
+def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str],
+              prefix_len: int = 0, norm_kind: str = "rmsnorm",
+              seq_sharded: bool = True):
+    """A whole ``layer_pattern`` period — every block in ``kinds`` with its
+    params from ``params_seq`` — built as ONE dataflow graph, optimized, and
+    executed in ONE ``shard_map``. This is the unit the paper's graph-level
+    optimizer actually evaluates: with ≥2 blocks, pass 2 fuses the
+    block→block seam (block k's FFN-out RS → residual → block k+1's LN1 →
+    QKV shared gather, and the MoE rs → residual → ln → route variant) that
+    no per-block graph can see, and pass 3's deterministic
+    nearest-pair policy co-schedules whatever independent RS/AG pairs the
+    merged graph exposes.
+
+    x: (B, S, d), sequence-sharded when ``seq_sharded`` (the training path)
+    or replicated when not (the decode/ragged-S allreduce path, dense blocks
+    only). Returns (period output, summed aux loss)."""
+    dtype = x.dtype
+    nodes = [df.Node("x", "input")]
+    weights, specs, aux_vals = {}, {}, []
+    src = "x"
+    for i, (params, kind) in enumerate(zip(params_seq, kinds)):
+        ns, src, aux, w, s = _block_graph_fragment(
+            tpc, params, cfg, kind, i, src, prefix_len=prefix_len,
+            dtype=dtype, seq_sharded=seq_sharded)
+        clash = sorted(set(w) & set(weights))
+        if clash:
+            raise df.GraphError(
+                f"period graph weight key collision on {clash[0]!r} "
+                f"(block {i})")
+        nodes += ns
+        weights.update(w)
+        specs.update(s)
+        if aux is not None:
+            aux_vals.append(aux)
+    graph = df.optimize(df.Graph(nodes, outputs=(src,) + tuple(aux_vals)))
     names = list(weights)
 
     def local(x, *ws):
-        outs = df.execute(graph, {"x": x}, dict(zip(names, ws)),
+        return df.execute(graph, {"x": x}, dict(zip(names, ws)),
                           axis=MODEL, cais=tpc.cais, norm=norm_kind,
                           backend=tpc.backend)
-        return outs if moe else outs[0]
 
-    in_specs = [(BATCH, MODEL, None)] + [specs[k] for k in names]
-    out_specs = ([(BATCH, MODEL, None), (MODEL,)] if moe
-                 else (BATCH, MODEL, None))
+    x_spec = (BATCH, MODEL, None) if seq_sharded else (BATCH, None, None)
+    in_specs = [x_spec] + [specs[k] for k in names]
+    out_specs = [x_spec] + [(MODEL,)] * len(aux_vals)
     res = _smap(tpc, local, in_specs, out_specs)(x, *weights.values())
-    if moe:
-        return res[0], jnp.mean(res[1])
-    return res, jnp.float32(0.0)
+    aux = jnp.float32(0.0)
+    for a in res[1:]:
+        aux = aux + jnp.mean(a)
+    return res[0], aux
+
+
+def sp_block(tpc: TPContext, x, params, cfg, kind: str = "attn",
+             prefix_len: int = 0, norm_kind: str = "rmsnorm",
+             seq_sharded: bool = True):
+    """A whole pre-norm transformer block — attention residual → FFN/MoE
+    residual — as a single-block period (see :func:`sp_period`): ONE
+    dataflow graph, optimized, executed in ONE ``shard_map``. The graph
+    spans the attention-out → FFN-in seam, so pass 2 fuses RS → residual →
+    LN → AG into one pipeline on every dense block and MoE routing flows
+    through the same IR.
+
+    ``params`` is the block param dict from ``models.transformer.init_block``
+    (``norm1``/``mixer``/``norm2``/``ffn``). x: (B, S, d) sequence-sharded
+    (or replicated with ``seq_sharded=False`` — the decode-style allreduce
+    schedule). Returns (block output, aux loss)."""
+    return sp_period(tpc, x, (params,), cfg, (kind,), prefix_len=prefix_len,
+                     norm_kind=norm_kind, seq_sharded=seq_sharded)
 
 
 def tp_applicable(cfg, kind: str, tp: int) -> bool:

@@ -117,7 +117,12 @@ def moe_forward(params, x, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
         g //= 2
     G = (B * S) // g
     xt = x.reshape(G, g, d)
-    xt = sharding.shard(xt, sharding.BATCH_AXES, None, None)
+    # tiny/ragged batches (e.g. decode S=1) can leave fewer groups than DP
+    # shards — the group dim then stays replicated instead of carrying an
+    # unsatisfiable sharding constraint
+    g_ax = (sharding.BATCH_AXES
+            if G % sharding.dp_size(sharding.current_mesh()) == 0 else None)
+    xt = sharding.shard(xt, g_ax, None, None)
 
     logits = xt.astype(jnp.float32) @ params["router"]
     probs = jax.nn.softmax(logits, -1)
@@ -134,10 +139,10 @@ def moe_forward(params, x, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
     # dispatch: tokens -> expert buffers (E, G, C, d)
     einp = jnp.einsum("gsec,gsd->egcd", dispatch.astype(dtype), xt)
-    einp = sharding.shard(einp, e_ax, sharding.BATCH_AXES, None, None)
+    einp = sharding.shard(einp, e_ax, g_ax, None, None)
 
     h = jnp.einsum("egcd,edf->egcf", einp, params["w_up"].astype(dtype))
-    h = sharding.shard(h, e_ax, sharding.BATCH_AXES, None, f_ax)
+    h = sharding.shard(h, e_ax, g_ax, None, f_ax)
     if gated(cfg.act):
         gate = jnp.einsum("egcd,edf->egcf", einp,
                           params["w_gate"].astype(dtype))
@@ -145,7 +150,7 @@ def moe_forward(params, x, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
     else:
         h = activation(cfg.act, h)
     eout = jnp.einsum("egcf,efd->egcd", h, params["w_down"].astype(dtype))
-    eout = sharding.shard(eout, e_ax, sharding.BATCH_AXES, None, None)
+    eout = sharding.shard(eout, e_ax, g_ax, None, None)
 
     out = jnp.einsum("gsec,egcd->gsd", combine.astype(dtype), eout)
     out = out.reshape(B, S, d)

@@ -87,6 +87,29 @@ def _tp_context(rt: Runtime):
                                      bidirectional=rt.cais_bidirectional))
 
 
+def _sp_axis(rt: Runtime, x):
+    """Sequence-parallel shard axis for a (B, S, d) activation — only when
+    the sequence actually divides over the model axis. Ragged/decode
+    sequences (S % axis != 0, incl. S=1) stay replicated instead of hitting
+    an unsatisfiable sharding constraint."""
+    if not rt.sequence_parallel or x.shape[1] <= 1:
+        return None
+    n = sharding.axis_size(sharding.current_mesh(), sharding.MODEL_AXIS)
+    return sharding.MODEL_AXIS if n > 1 and x.shape[1] % n == 0 else None
+
+
+def _whole_block_applicable(cfg: ArchConfig, kind: str, tp: int) -> bool:
+    """Can this block run as ONE dataflow graph (attention AND FFN/MoE side
+    both explicit-TP-applicable)? Shared by the per-block and period paths
+    so their gating cannot drift apart."""
+    from repro.core import tp as tp_mod
+
+    return (kind in ("attn", "swa") and tp_mod.tp_applicable(cfg, kind, tp)
+            and _has_ffn(cfg)
+            and (tp_mod.tp_applicable(cfg, "moe", tp)
+                 or tp_mod.tp_applicable(cfg, "ffn", tp)))
+
+
 def block_forward(kind, params, x, cfg: ArchConfig, rt: Runtime,
                   prefix_len: int = 0):
     """Pre-norm residual block. Returns (x, aux_loss).
@@ -95,24 +118,29 @@ def block_forward(kind, params, x, cfg: ArchConfig, rt: Runtime,
     runs as ONE dataflow graph in one ``shard_map`` (``tp_mod.sp_block``):
     the graph spans the attention-out → FFN-in seam, so the optimizer's
     pass 2 fuses RS → residual → LN → AG across the sub-layer boundary and
-    MoE routing goes through the IR. Blocks where only one side is
+    MoE routing goes through the IR. When the sequence can't be sharded
+    over the ring (decode S=1, ragged S % tp != 0) dense blocks fall back
+    *per-collective*, not per-block: the same graph without the sequence
+    sharding — column/row-sharded GEMMs with one backend-dispatched
+    allreduce (``gemm_ar``) per sub-layer. Blocks where only one side is
     applicable fall back to the per-sub-layer graphs below."""
     from repro.core import tp as tp_mod
 
-    tpc = _tp_context(rt) if x.shape[1] > 1 else None
+    tpc = _tp_context(rt)
     dtype = x.dtype
 
     # ----- whole block as one dataflow graph -----
-    if tpc is not None and x.shape[1] % tpc.tp == 0 \
-            and kind in ("attn", "swa") \
-            and tp_mod.tp_applicable(cfg, kind, tpc.tp) and _has_ffn(cfg) \
-            and (tp_mod.tp_applicable(cfg, "moe", tpc.tp)
-                 or tp_mod.tp_applicable(cfg, "ffn", tpc.tp)):
+    whole = tpc is not None and _whole_block_applicable(cfg, kind, tpc.tp)
+    if whole and x.shape[1] % tpc.tp == 0:
         x, aux = tp_mod.sp_block(tpc, x, params, cfg, kind,
                                  prefix_len=prefix_len, norm_kind=cfg.norm)
-        sp = sharding.MODEL_AXIS if (rt.sequence_parallel
-                                     and x.shape[1] > 1) else None
-        x = sharding.shard(x, sharding.BATCH_AXES, sp, None)
+        x = sharding.shard(x, sharding.BATCH_AXES, _sp_axis(rt, x), None)
+        return x, aux
+    if whole and x.shape[1] % tpc.tp != 0 and cfg.moe is None:
+        x, aux = tp_mod.sp_block(tpc, x, params, cfg, kind,
+                                 prefix_len=prefix_len, norm_kind=cfg.norm,
+                                 seq_sharded=False)
+        x = sharding.shard(x, sharding.BATCH_AXES, None, None)
         return x, aux
 
     # ----- mixer -----
@@ -150,8 +178,7 @@ def block_forward(kind, params, x, cfg: ArchConfig, rt: Runtime,
             h = apply_norm(cfg.norm, params["norm2"], x)
             out, aux = ffn_mod.ffn_forward(params["ffn"], h, cfg)
             x = x + out
-    sp = sharding.MODEL_AXIS if (rt.sequence_parallel and x.shape[1] > 1) else None
-    x = sharding.shard(x, sharding.BATCH_AXES, sp, None)
+    x = sharding.shard(x, sharding.BATCH_AXES, _sp_axis(rt, x), None)
     return x, aux
 
 
@@ -180,8 +207,7 @@ def block_prefill(kind, params, x, cfg, rt: Runtime, s_max):
         h = apply_norm(cfg.norm, params["norm2"], x)
         out, _ = ffn_mod.ffn_forward(params["ffn"], h, cfg)
         x = x + out
-    sp = sharding.MODEL_AXIS if (rt.sequence_parallel and x.shape[1] > 1) else None
-    x = sharding.shard(x, sharding.BATCH_AXES, sp, None)
+    x = sharding.shard(x, sharding.BATCH_AXES, _sp_axis(rt, x), None)
     return x, cache
 
 
@@ -272,23 +298,53 @@ def init_stack(key, cfg: ArchConfig, dtype):
     return params
 
 
+def _blocks_forward(kinds, params_seq, x, cfg: ArchConfig, rt: Runtime,
+                    prefix_len: int = 0):
+    """Run consecutive blocks. When EVERY block is whole-block TP-applicable
+    the run executes as ONE period-level dataflow graph in one ``shard_map``
+    (``tp_mod.sp_period``) — the optimizer sees the block→block seams, so
+    pass 2's cross-block RS→residual→LN→AG fusion and pass 3's asymmetric
+    pairing fire inside the model path. Otherwise falls back per block."""
+    from repro.core import tp as tp_mod
+
+    tpc = _tp_context(rt)
+    if (tpc is not None and len(params_seq) > 0
+            and x.shape[1] % tpc.tp == 0
+            and all(_whole_block_applicable(cfg, k, tpc.tp)
+                    for k in kinds)):
+        x, aux = tp_mod.sp_period(tpc, x, params_seq, cfg, kinds,
+                                  prefix_len=prefix_len, norm_kind=cfg.norm)
+        x = sharding.shard(x, sharding.BATCH_AXES, _sp_axis(rt, x), None)
+        return x, aux
+    aux = jnp.float32(0.0)
+    for kind, p in zip(kinds, params_seq):
+        x, a = block_forward(kind, p, x, cfg, rt, prefix_len)
+        aux = aux + a
+    return x, aux
+
+
 def stack_forward(params, x, cfg: ArchConfig, rt: Runtime,
                   prefix_len: int = 0):
     pattern, P, n_full, rem = _pattern_split(cfg)
 
     def period_fwd(carry, pslice):
         x, aux = carry
-        for i, kind in enumerate(pattern):
-            x, a = block_forward(kind, pslice[f"b{i}"], x, cfg, rt, prefix_len)
-            aux = aux + a
-        return (x, aux), None
+        x, a = _blocks_forward(pattern, [pslice[f"b{i}"] for i in range(P)],
+                               x, cfg, rt, prefix_len)
+        return (x, aux + a), None
 
+    def tail_fwd(x, ps):
+        return _blocks_forward(rem, ps, x, cfg, rt, prefix_len)
+
+    # remat covers the scanned periods AND the remainder tail — a stack with
+    # num_layers % len(pattern) != 0 must not silently keep tail activations
     body = jax.checkpoint(period_fwd) if rt.remat else period_fwd
+    tail = jax.checkpoint(tail_fwd) if rt.remat else tail_fwd
     aux = jnp.float32(0.0)
     if n_full:
         (x, aux), _ = jax.lax.scan(body, (x, aux), params["periods"])
-    for p, kind in zip(params["rem"], rem):
-        x, a = block_forward(kind, p, x, cfg, rt, prefix_len)
+    if rem:
+        x, a = tail(x, params["rem"])
         aux = aux + a
     return x, aux
 

@@ -303,6 +303,92 @@ def main():
           float(np.abs(np.asarray(outs_ep["tp8"])
                        - np.asarray(outs_ep["tp1"])).max()), 1e-5)
 
+    # ---------------- period-level graph vs per-block composition ---------
+    # sp_period concatenates ≥2 block fragments into ONE graph / ONE
+    # shard_map (pass 2 fuses the block→block rs→residual→ln→ag seam); pin
+    # it to the per-block sp_block composition at 1e-6 on the 4-way ring for
+    # dense, GQA, MoE, and a mixed attn/swa pattern, per backend.
+    cfg_mixed = cfg_blk.scaled(window=16, layer_pattern=("attn", "swa"))
+    for label, cfg_p, kinds_p in (
+            ("dense", cfg_blk, ("attn", "attn")),
+            ("gqa", cfg_blk_gqa, ("attn", "attn")),
+            ("moe", cfg_blk_moe, ("attn", "attn")),
+            ("mixed", cfg_mixed, ("attn", "swa"))):
+        ps = [tr_mod.init_block(jax.random.key(30 + j), k_, cfg_p,
+                                jnp.float32)
+              for j, k_ in enumerate(kinds_p)]
+        for mode in ("barrier", "cais"):
+            tpc4 = tp_mod.TPContext(mesh=mesh4, backend=mode, cais=cais4)
+            got, aux_g = tp_mod.sp_period(tpc4, x, ps, cfg_p, kinds_p)
+            refx, refaux = x, jnp.float32(0.0)
+            for p_, k_ in zip(ps, kinds_p):
+                refx, a_ = tp_mod.sp_block(tpc4, refx, p_, cfg_p, k_)
+                refaux = refaux + a_
+            check(f"period_graph.{label}.{mode}",
+                  float(jnp.abs(got - refx).max()), 1e-6)
+            check(f"period_graph.{label}.{mode}.aux",
+                  abs(float(aux_g) - float(refaux)), 1e-6)
+
+    # ---------------- decode-path TP (S=1: no sequence sharding) ----------
+    # S=1 can't shard the sequence over the ring, but row/col-sharded GEMMs
+    # don't need it: block_forward must route dense blocks through the
+    # allreduce schedule (backend gemm_ar) instead of silently unsharding.
+    from repro.core.backends import (CAISBackend, register_backend,
+                                     unregister_backend)
+
+    ar_calls = {"n": 0}
+
+    class CountingCAIS(CAISBackend):
+        name = "cais-count"
+
+        def gemm_ar(self, xl, wl, axis, cc):
+            ar_calls["n"] += 1
+            return super().gemm_ar(xl, wl, axis, cc)
+
+    register_backend(CountingCAIS())
+    try:
+        params_dec = tr_mod.init_block(jax.random.key(25), "attn", cfg_blk,
+                                       jnp.float32)
+        x1 = x[:, :1]                                   # (B, 1, d)
+        outs_dec = {}
+        for mode in ("cais-count", "auto"):
+            rt_dec = Runtime(compute_dtype="float32", remat=False,
+                             tp_mode=mode, loss_chunk=16, cais_chunks=2)
+            with sharding.use_mesh(mesh4):
+                outs_dec[mode], _ = tr_mod.block_forward(
+                    "attn", params_dec, x1, cfg_blk, rt_dec)
+        check("decode.s1_block_parity",
+              float(jnp.abs(outs_dec["cais-count"]
+                            - outs_dec["auto"]).max()), 1e-4)
+        # two sub-layers → two backend-dispatched allreduces traced
+        check("decode.s1_backend_dispatch",
+              0.0 if ar_calls["n"] >= 2 else 1.0)
+    finally:
+        unregister_backend("cais-count")
+
+    # ragged S (S % tp != 0, S > 1): dense blocks keep TP via the allreduce
+    # schedule, the MoE fallback must not die on an unsatisfiable
+    # sequence-parallel / group sharding constraint
+    x3 = x[:, :3]
+    outs_rag = {}
+    for mode in ("cais", "auto"):
+        rt_rag = Runtime(compute_dtype="float32", remat=False, tp_mode=mode,
+                         loss_chunk=16, cais_chunks=2)
+        with sharding.use_mesh(mesh4):
+            outs_rag[mode], _ = tr_mod.block_forward(
+                "attn", params_dec, x3, cfg_blk, rt_rag)
+    check("decode.ragged_s_parity",
+          float(jnp.abs(outs_rag["cais"] - outs_rag["auto"]).max()), 1e-4)
+    rt_rag = Runtime(compute_dtype="float32", remat=False, tp_mode="cais",
+                     loss_chunk=16, cais_chunks=2)
+    params_rag_moe = tr_mod.init_block(jax.random.key(26), "attn",
+                                       cfg_blk_moe, jnp.float32)
+    with sharding.use_mesh(mesh4):
+        out_rm, _ = tr_mod.block_forward("attn", params_rag_moe, x3,
+                                         cfg_blk_moe, rt_rag)
+    check("decode.ragged_s_moe_runs",
+          0.0 if out_rm.shape == x3.shape else 1.0)
+
     # ---------------- full model: auto == barrier == cais ----------------
     mesh2 = sharding.make_mesh((2, 4), ("data", "model"))
     cfg = get_arch("deepseek-7b").smoke().scaled(

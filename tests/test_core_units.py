@@ -199,7 +199,8 @@ def test_block_graph_pass3_pairs_across_microbatches():
     from repro.core import tp
 
     g = df.merge_graphs([tp.dense_block_graph(_toy_core, True, "silu"),
-                         tp.dense_block_graph(_toy_core, True, "silu")])
+                         tp.dense_block_graph(_toy_core, True, "silu")],
+                        share_weights=True)
     opt = df.optimize(g)
     assert any(n.op == "overlap_asym" for n in opt.nodes)
 
@@ -217,7 +218,8 @@ def test_block_graph_reference_semantics():
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
 
     merged = df.merge_graphs([tp.dense_block_graph(_toy_core, True, "silu"),
-                              tp.dense_block_graph(_toy_core, True, "silu")])
+                              tp.dense_block_graph(_toy_core, True, "silu")],
+                             share_weights=True)
     vals = {"mb0.x": x, "mb1.x": x[::-1]}
     outs_a = df.execute(merged, vals, w)
     outs_b = df.execute(df.optimize(merged), vals, w)

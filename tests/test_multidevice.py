@@ -24,7 +24,7 @@ def test_multidevice_suite():
     env["PYTHONPATH"] = str(REPO / "src")
     proc = subprocess.run(
         [sys.executable, str(HERE / "multidev_checks.py")],
-        capture_output=True, text=True, env=env, timeout=1200)
+        capture_output=True, text=True, env=env, timeout=2400)
     sys.stdout.write(proc.stdout)
     sys.stderr.write(proc.stderr[-4000:])
     assert proc.returncode == 0, "multi-device checks failed"

@@ -1,0 +1,232 @@
+"""Period-level dataflow graphs (ISSUE 3 tentpole): ≥2 blocks of a
+``layer_pattern`` period concatenated into ONE graph, so the optimizer sees
+the block→block seams — plus the merge_graphs weight-prefixing semantics and
+the deterministic pass-3 pairing policy that ride along."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dataflow as df
+from repro.core import tp
+
+
+def _toy_core(q, k, v):
+    # stand-in attention core: local math with the same (B, S, d) layout
+    return q * jax.nn.sigmoid(k) + v
+
+
+def _period_weights(key, n_blocks=2, d=16, f=24):
+    w = {}
+    for i in range(n_blocks):
+        p = f"b{i}."
+        ks = jax.random.split(jax.random.fold_in(key, i), 9)
+        w[p + "scale1"] = jax.random.normal(ks[0], (d,)) * 0.1 + 1.0
+        for j, kk in enumerate(("wq", "wk", "wv", "wo")):
+            w[p + kk] = jax.random.normal(ks[1 + j], (d, d)) * 0.1
+        w[p + "scale2"] = jax.random.normal(ks[5], (d,)) * 0.1 + 1.0
+        w[p + "w_up"] = jax.random.normal(ks[6], (d, f)) * 0.1
+        w[p + "w_gate"] = jax.random.normal(ks[7], (d, f)) * 0.1
+        w[p + "w_down"] = jax.random.normal(ks[8], (f, d)) * 0.1
+    return w
+
+
+def _cross_block_nodes(g):
+    """Fused/paired nodes whose weights span more than one block prefix."""
+    def prefixes(n):
+        return {w.split(".")[0] for w in n.weights if "." in w}
+    return [n for n in g.nodes
+            if n.op in ("fused_rs_ln_ag", "fused_rs_ln_ag_multi",
+                        "overlap_asym") and len(prefixes(n)) > 1]
+
+
+def test_period_graph_fuses_cross_block_seam():
+    """Acceptance: the optimized 2-block dense period graph must contain a
+    cross-block pass-3 overlap_asym OR cross-block pass-2 fusion node —
+    here pass 2 fuses block 0's FFN-out RS → residual → block 1's LN1 →
+    QKV shared gather into one fused_rs_ln_ag_multi spanning both blocks."""
+    g = tp.dense_period_graph([_toy_core, _toy_core], True, "silu")
+    opt = df.optimize(g)
+    cross = _cross_block_nodes(opt)
+    assert cross, [(n.op, n.name) for n in opt.nodes]
+    # the seam carries block 0's down-proj and block 1's LN1 + QKV weights
+    seam = cross[0]
+    assert "b0.w_down" in seam.weights and "b1.wq" in seam.weights
+    # no raw collective survives optimization inside the period
+    assert not ({"allgather", "reduce_scatter"}
+                & {n.op for n in opt.nodes})
+
+
+def test_period_graph_optimize_idempotent():
+    g = tp.dense_period_graph([_toy_core, _toy_core], True, "silu")
+    opt = df.optimize(g)
+    opt2 = df.optimize(opt)
+    assert [(n.name, n.op) for n in opt.nodes] == \
+        [(n.name, n.op) for n in opt2.nodes]
+
+
+def test_period_graph_reference_semantics():
+    """optimize() must preserve the math of the period graph (single-device
+    reference), gated and non-gated."""
+    for has_gate, act in ((True, "silu"), (False, "gelu")):
+        g = tp.dense_period_graph([_toy_core, _toy_core], has_gate, act)
+        w = _period_weights(jax.random.key(0))
+        if not has_gate:
+            w = {k: v for k, v in w.items() if not k.endswith("w_gate")}
+        x = jax.random.normal(jax.random.key(1), (2, 8, 16))
+        a = df.execute(g, {"x": x}, w)[0]
+        b = df.execute(df.optimize(g), {"x": x}, w)[0]
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_moe_seam_fuses_rs_ln_before_route():
+    """Pass 2's MoE variant: attention-out gemm_rs → residual → LN2 →
+    route fuses into fused_rs_ln (the trailing collective is the expert
+    a2a, not a gather), re-exposing the normed value for route/unroute."""
+    def route(xn, router):
+        return jnp.stack([xn, 2.0 * xn]), jnp.float32(0.5), \
+            jnp.zeros((1,), jnp.float32)
+
+    def expert(chunk, wu, wd):
+        return jax.nn.gelu(chunk @ wu) @ wd
+
+    def unroute(eout, combine, xn):
+        return combine * (eout[0] + eout[1])
+
+    g = tp.moe_block_graph(_toy_core, route, expert, unroute,
+                           ("w_up", "w_down"), False)
+    opt = df.optimize(g)
+    ops = [n.op for n in opt.nodes]
+    assert "fused_rs_ln" in ops
+    assert {"route", "a2a_ffn", "unroute"} <= set(ops)
+    # idempotent here too
+    assert [(n.name, n.op) for n in df.optimize(opt).nodes] == \
+        [(n.name, n.op) for n in opt.nodes]
+    # reference semantics
+    d, f = 16, 24
+    ks = jax.random.split(jax.random.key(2), 9)
+    w = {"scale1": jax.random.normal(ks[0], (d,)) * 0.1 + 1.0,
+         "scale2": jax.random.normal(ks[5], (d,)) * 0.1 + 1.0,
+         "router": jax.random.normal(ks[6], (d, 4)) * 0.1,
+         "w_up": jax.random.normal(ks[7], (d, f)) * 0.1,
+         "w_down": jax.random.normal(ks[8], (f, d)) * 0.1}
+    for j, kk in enumerate(("wq", "wk", "wv", "wo")):
+        w[kk] = jax.random.normal(ks[1 + j], (d, d)) * 0.1
+    x = jax.random.normal(jax.random.key(3), (2, 8, d))
+    a = df.execute(g, {"x": x}, w)
+    b = df.execute(opt, {"x": x}, w)
+    for u, v in zip(a, b):
+        np.testing.assert_allclose(np.asarray(u), np.asarray(v), atol=1e-5)
+
+
+def test_merge_graphs_prefixes_weights_by_default():
+    """Merging graphs of DIFFERENT blocks must not alias wq/w_up/… — weight
+    keys are namespaced like values unless share_weights=True."""
+    g = df.merge_graphs([tp.dense_block_graph(_toy_core, True, "silu"),
+                         tp.dense_block_graph(_toy_core, True, "silu")])
+    wkeys = {w for n in g.nodes for w in n.weights}
+    assert all(k.startswith(("mb0.", "mb1.")) for k in wkeys)
+    # distinct per-block params flow to the right copy
+    w = _period_weights(jax.random.key(4))
+    w = {("mb" + k[1:]): v for k, v in w.items()}     # b0./b1. → mb0./mb1.
+    x = jax.random.normal(jax.random.key(5), (2, 8, 16))
+    outs = df.execute(df.optimize(g), {"mb0.x": x, "mb1.x": x}, w)
+    single0 = tp.dense_block_graph(_toy_core, True, "silu")
+    ref0 = df.execute(single0, {"x": x},
+                      {k[4:]: v for k, v in w.items()
+                       if k.startswith("mb0.")})[0]
+    ref1 = df.execute(single0, {"x": x},
+                      {k[4:]: v for k, v in w.items()
+                       if k.startswith("mb1.")})[0]
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(ref0),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(outs[1]), np.asarray(ref1),
+                               atol=1e-5)
+
+
+def test_merge_graphs_share_weights_opt_out():
+    g = df.merge_graphs([df.sublayer_graph(), df.sublayer_graph()],
+                        share_weights=True)
+    wkeys = {w for n in g.nodes for w in n.weights}
+    assert wkeys == {"w1", "scale", "w2"}
+
+
+def test_merge_graphs_duplicate_prefix_raises():
+    with pytest.raises(df.GraphError, match="dup."):
+        df.merge_graphs([df.sublayer_graph(), df.sublayer_graph()],
+                        prefixes=["dup.", "dup."])
+    with pytest.raises(df.GraphError, match="prefixes"):
+        df.merge_graphs([df.sublayer_graph()], prefixes=["a.", "b."])
+
+
+def test_pair_asymmetric_deterministic_nearest_first():
+    """Two merged microbatch period chains: pass 3 must pick the ADJACENT
+    independent seam (nearest topological distance), identically on every
+    run — not whatever pair node order surfaces first."""
+    mk = lambda: tp.dense_block_graph(_toy_core, True, "silu")
+    g = df.merge_graphs([mk(), mk()], share_weights=True)
+    opt1 = df.optimize(g)
+    opt2 = df.optimize(df.merge_graphs([mk(), mk()], share_weights=True))
+    names1 = [(n.name, n.op) for n in opt1.nodes]
+    assert names1 == [(n.name, n.op) for n in opt2.nodes]
+    pairs = [n for n in opt1.nodes if n.op == "overlap_asym"]
+    # one cross-microbatch pair forms (the fusion itself then serializes the
+    # two chains, so the remaining RS/AG pair is correctly left alone)
+    assert len(pairs) == 1
+    # nearest-first: mb0's FFN-out RS pairs with mb1's attention gather —
+    # the adjacent seam, not an arbitrary first match
+    assert pairs[0].name == "mb0.rs2+mb1.q+mb1.k+mb1.v", pairs[0].name
+
+
+def test_remat_covers_rem_tail():
+    """num_layers % len(layer_pattern) != 0 leaves tail blocks outside the
+    scanned periods; remat must wrap them too (ISSUE 3 satellite) — loss and
+    grads with remat on/off must match."""
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.runtime import Runtime
+
+    cfg = get_arch("deepseek-7b").smoke().scaled(
+        num_layers=3, layer_pattern=("attn", "attn"), d_model=32,
+        num_heads=4, num_kv_heads=4, head_dim=8, d_ff=48)
+    assert cfg.num_layers % len(cfg.layer_pattern) != 0
+    tokens = jax.random.randint(jax.random.key(0), (2, 16), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    losses, grads = {}, {}
+    for remat in (False, True):
+        rt = Runtime(compute_dtype="float32", remat=remat, loss_chunk=16)
+        model = build_model(cfg, rt)
+        params = model.init(jax.random.key(1))
+        losses[remat], grads[remat] = jax.value_and_grad(model.loss)(
+            params, batch)
+    np.testing.assert_allclose(float(losses[True]), float(losses[False]),
+                               rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(grads[True]),
+                    jax.tree.leaves(grads[False])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_sp_period_matches_per_block_single_device():
+    """sp_period (one graph per period) vs the per-block sp_block
+    composition on a tp=1 mesh — dense 2-block period."""
+    import repro.models.transformer as tr
+    from repro import sharding
+    from repro.configs import get_arch
+    from repro.core.primitives import CAISConfig
+
+    cfg = get_arch("deepseek-7b").smoke().scaled(
+        num_layers=2, d_model=32, num_heads=4, num_kv_heads=4, head_dim=8,
+        d_ff=48)
+    mesh = sharding.make_mesh((1, 1), ("data", "model"))
+    tpc = tp.TPContext(mesh=mesh, backend="cais",
+                       cais=CAISConfig(num_chunks=1))
+    kinds = ("attn", "attn")
+    ps = [tr.init_block(jax.random.key(7 + i), k, cfg, jnp.float32)
+          for i, k in enumerate(kinds)]
+    x = jax.random.normal(jax.random.key(8), (2, 16, 32), jnp.float32)
+    got, aux = tp.sp_period(tpc, x, ps, cfg, kinds)
+    ref = x
+    for p_, k_ in zip(ps, kinds):
+        ref, _ = tp.sp_block(tpc, ref, p_, cfg, k_)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-6)
