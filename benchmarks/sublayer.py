@@ -2,11 +2,20 @@
 plus measured cells on an 8-virtual-device ring (subprocess — the parent
 keeps one device): the whole-block dataflow graph (``sp_block``, one
 shard_map, pass-2 seam fusion) against the PR-1 per-sub-layer composition
-(``sp_attention`` + ``sp_ffn``), and the period-level graph (``sp_period``,
+(``sp_attention`` + ``sp_ffn``), the period-level graph (``sp_period``,
 2 blocks in ONE shard_map with the cross-block seam fused) against the
-per-block ``sp_block`` composition. With ``$REPRO_BENCH_JSON`` set, every
-row (including the subprocess cells) is dumped as the JSON baseline the CI
-slow-suite commits as ``BENCH_pr3.json``."""
+per-block ``sp_block`` composition, and the microbatch-split period
+(``num_microbatches=2`` — two independent chains in one graph, pass-3
+``overlap_asym`` across them) against the unsplit serialized period. With
+``$REPRO_BENCH_JSON`` set, every row (including the subprocess cells) is
+dumped as the JSON baseline the CI slow-suite commits as
+``BENCH_pr3.json`` — a ``meta.sublayer_env`` row records the shapes/mode
+so baselines regenerated under different settings are not silently
+compared. Measured cells run on CPU-emulated virtual devices, where
+``collective_permute`` chains serialize (no real bidirectional links), so
+wall-clock "speedups" there are informational — the overlap cells are the
+hook for real-hardware runs, and the perfsim Fig. 12 rows model the paper's
+hardware."""
 from __future__ import annotations
 
 import json
@@ -81,6 +90,17 @@ def _block_child() -> None:
         emit(f"period.graph_vs_perblock.{mode}", t_period,
              f"perblock_us={t_pb:.0f} speedup={t_pb / t_period:.2f}x")
 
+        # microbatch-split period (2 independent chains in ONE graph, pass 3
+        # cross-pairs their RS/AG into overlap_asym) vs the same period
+        # unsplit (straight line — fully serialized after pass-2 fusion)
+        split2 = jax.jit(
+            lambda x, tpc=tpc: tp_mod.sp_period(
+                tpc, x, params2, cfg, ("attn", "attn"),
+                num_microbatches=2)[0])
+        t_split2 = time_fn(split2, x)
+        emit(f"period.split_vs_unsplit.{mode}", t_split2,
+             f"unsplit_us={t_period:.0f} speedup={t_period / t_split2:.2f}x")
+
 
 def run() -> None:
     if os.environ.get(_CHILD):
@@ -107,6 +127,16 @@ def run() -> None:
         with open(env["REPRO_BENCH_JSON"]) as fh:
             for row in json.load(fh):
                 record(row["name"], row["us_per_call"], row["derived"])
+
+    # provenance row: which shapes/platform produced these numbers, so a
+    # committed baseline regenerated under other settings is identifiable
+    import jax
+
+    from benchmarks.common import bench_tiny
+    emit("meta.sublayer_env", 0.0,
+         f"tiny={int(bench_tiny())} jax={jax.__version__} "
+         f"platform={jax.default_backend()} "
+         "note=measured-cells-cpu-emulated-informational")
 
     f = ps.calibrated_fabric()
     for cfg in ps.PAPER_MODELS:

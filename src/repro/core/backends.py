@@ -46,6 +46,11 @@ Registration API
 
 All methods run INSIDE ``shard_map`` (they may use ``lax.axis_index`` /
 ``lax.ppermute``); ``repro.core.tp`` owns the pjit-callable wrapping.
+
+``docs/backends.md`` is the authoring guide: which methods are mandatory vs
+composed by default from the backend's own primitives (``gemm_ar``,
+``fused_rs_ln``, ``fused_rs_ln_ag[_multi]``), with ``barrier``/``cais`` as
+the worked examples.
 """
 from __future__ import annotations
 
@@ -91,8 +96,17 @@ class CollectiveBackend:
         raise NotImplementedError
 
     def gemm_ar(self, x, w, axis: str, cais: CAISConfig) -> jnp.ndarray:
-        """(B, S, d_loc) feat-sharded x; (d_loc, F) w -> (B, S, F) reduced."""
-        raise NotImplementedError
+        """(B, S, d_loc) feat-sharded x; (d_loc, F) w -> (B, S, F) reduced.
+        Default: AR = RS + AG composed from the backend's own ``gemm_rs``
+        (the decode/ragged-S dense schedule works on any backend that
+        implements the RS side). Falls back to a monolithic allreduce when
+        the sequence cannot scatter over the ring (S % n != 0, e.g. S=1)."""
+        n = prim._axis_size(axis) if cais.interpret_n is None \
+            else cais.interpret_n
+        if int(x.shape[1]) % max(n, 1) != 0:
+            return prim.barrier_gemm_ar(x, w, axis)
+        y = self.gemm_rs(x, w, axis, cais)
+        return lax.all_gather(y, axis, axis=1, tiled=True)
 
     # -- EP ---------------------------------------------------------------
     def a2a_expert_ffn(self, send, ffn: Callable, axis: str,

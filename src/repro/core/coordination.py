@@ -13,7 +13,10 @@ up), chunks too big serialize compute behind communication.
 
 :func:`plan` picks ``num_chunks`` from the α-β model under a staging-bytes
 budget; :func:`schedule_metrics` evaluates any chunking (the Fig. 13/14
-sensitivity sweeps call it directly).
+sensitivity sweeps call it directly); :func:`plan_microbatches` applies the
+same latency-floor reasoning one level up, to how many independent
+microbatch chains a period graph should split into (``tp.sp_period``'s
+``num_microbatches="auto"``).
 """
 from __future__ import annotations
 
@@ -85,3 +88,39 @@ def plan(payload_bytes: float, ring: int, *, compute_time: float = 0.0,
     c = max(c_staging, min(c_latency, 64))
     return schedule_metrics(payload_bytes, ring, c, compute_time,
                             bidirectional, hw)
+
+
+def plan_microbatches(batch: int, payload_bytes: float, ring: int, *,
+                      max_microbatches: int = 4,
+                      max_latency_fraction: float = 0.25,
+                      bidirectional: bool = True,
+                      hw: HWSpec = V5E) -> int:
+    """How many independent microbatch chains should a period graph split
+    into (``tp.sp_period``'s ``num_microbatches="auto"``)?
+
+    Splitting multiplies the independent gemm_rs/ag_gemm pairs pass 3 can
+    co-schedule (``overlap_asym``) but divides every collective's payload by
+    the same factor, pushing chunks toward the hop-latency floor — the same
+    merge-window trade-off :func:`plan` resolves one level down. Accept the
+    largest power-of-two split (≤ ``max_microbatches``) that divides
+    ``batch`` and whose per-microbatch α-β plan still carries ≥2 chunks
+    above the latency bound (room left to pipeline within each chain).
+
+    ``payload_bytes`` is the full-batch payload of the period's largest
+    collective (the gathered activation); ``batch`` is the per-device batch
+    the split has to divide."""
+    if ring <= 1 or batch <= 1:
+        return 1
+    mb = 1
+    cand = 2
+    while cand <= min(max_microbatches, batch):
+        if batch % cand:
+            break
+        p = plan(payload_bytes / cand, ring,
+                 max_latency_fraction=max_latency_fraction,
+                 bidirectional=bidirectional, hw=hw)
+        if p.num_chunks < 2:
+            break
+        mb = cand
+        cand *= 2
+    return mb

@@ -70,7 +70,15 @@ Fused ops (produced by ``optimize``, executed via the backend):
     pairs are ranked by topological distance (ties: earliest position, then
     node names), so a merged microbatch/period graph picks the adjacent
     seam — one chain's FFN-out RS against the *nearest* independent
-    attention gather — rather than an arbitrary first match.
+    attention gather — rather than an arbitrary first match. Candidates
+    must come from *different* chains (disjoint ``input``-ancestor sets):
+    two collectives fed by the same microbatch's data never pair, even when
+    a fork makes them dependency-free, so a chain is never lockstep-
+    serialized against itself.
+
+A worked trace of a 2-block period through every pass lives in
+``docs/architecture.md``; ``docs/backends.md`` documents the backend methods
+each fused op dispatches to.
 
 The executor runs a graph either as pure math (no mesh; reference) or inside
 ``shard_map`` (explicit TP), dispatching every fused collective op through a
@@ -341,6 +349,26 @@ def fuse_sublayer_chain(g: Graph) -> Graph:
     return Graph(_topo(nodes, g.outputs), g.outputs)
 
 
+def _input_ancestors(g: Graph, nodes: List[Node]) -> Dict[str, frozenset]:
+    """Node name → the set of graph ``input`` nodes it transitively depends
+    on. Two nodes belong to the same microbatch *chain* iff these sets
+    intersect: merged microbatch fragments each hang off their own input
+    (``mb{i}.x``), so cross-chain sets are disjoint while a fork inside one
+    chain shares its input ancestor. ``nodes`` must be in topo order."""
+    anc: Dict[str, frozenset] = {}
+    for n in nodes:
+        if n.op == "input":
+            anc[n.name] = frozenset((n.name,))
+            continue
+        s = frozenset()
+        for v in n.inputs:
+            p = g.node_producing(v)
+            if p is not None:
+                s |= anc[p.name]
+        anc[n.name] = s
+    return anc
+
+
 def pair_asymmetric(g: Graph) -> Graph:
     """Pass 3: co-schedule an independent gemm_rs + ag_gemm[_multi] pair so
     their complementary ring directions share the links each step (e.g. one
@@ -353,15 +381,25 @@ def pair_asymmetric(g: Graph) -> Graph:
     co-schedules the *adjacent* seam (chain k's FFN-out RS with the nearest
     independent attention gather of chain k+1) instead of whatever pair node
     order happened to surface first. Repeats until no independent pair
-    remains; the result is a fixed point of the pass."""
+    remains; the result is a fixed point of the pass.
+
+    Chain-id guard: both collectives must additionally come from different
+    chains (disjoint ``input``-ancestor sets). The overlap primitive runs
+    its two streams in lockstep, so pairing two collectives fed by the SAME
+    microbatch's data — dependency-free only because of a fork — would
+    serialize that chain against itself instead of overlapping independent
+    work."""
     nodes = _topo(list(g.nodes), g.outputs)
     order = {n.name: i for i, n in enumerate(nodes)}
+    chain = _input_ancestors(g, nodes)
     best = None
     for a in nodes:
         if a.op != "gemm_rs":
             continue
         for b in nodes:
             if b.op not in ("ag_gemm", "ag_gemm_multi") or b.name == a.name:
+                continue
+            if chain[a.name] & chain[b.name]:
                 continue
             if g.reaches(a.name, b.name) or g.reaches(b.name, a.name):
                 continue

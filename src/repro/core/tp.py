@@ -21,6 +21,16 @@ of a ``cfg.layer_pattern`` period concatenates into ONE graph run in ONE
 ``shard_map``, so the optimizer also sees the block→block seams —
 cross-block RS→residual→LN→AG fusion (pass 2) and deterministic asymmetric
 pairing (pass 3) fire inside ``stack_forward``, not just in tests.
+
+A straight-line period is fully serialized after pass-2 fusion, so pass 3
+has nothing to pair; ``num_microbatches`` (a :class:`TPContext` knob, or a
+direct ``sp_period`` argument) splits the batch into that many independent
+per-microbatch graph chains merged into the SAME graph
+(``merge_graphs(share_weights=True)``) and re-concatenated inside the same
+single ``shard_map`` — giving pass 3 the cross-chain ``gemm_rs`` /
+``ag_gemm`` pairs it needs to emit ``overlap_asym`` inside the model path.
+``"auto"`` sizes the split via :func:`repro.core.coordination.
+plan_microbatches`. See ``docs/architecture.md`` for the full layer map.
 """
 from __future__ import annotations
 
@@ -29,10 +39,12 @@ from typing import Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro import sharding
+from repro.core import coordination
 from repro.core import dataflow as df
 from repro.core.backends import CollectiveBackend, get_backend
 from repro.core.primitives import CAISConfig
@@ -47,11 +59,15 @@ class TPContext:
 
     ``backend`` may be given as a registry name (``"barrier"``, ``"cais"``,
     …) or a :class:`CollectiveBackend` instance; it is resolved to an
-    instance at construction."""
+    instance at construction. ``num_microbatches`` is the period-graph
+    batch split (int, or ``"auto"`` to size it from the α-β model via
+    :func:`repro.core.coordination.plan_microbatches`); 1 disables
+    splitting."""
 
     mesh: Mesh
     backend: Union[str, CollectiveBackend] = "cais"
     cais: CAISConfig = CAISConfig()
+    num_microbatches: Union[int, str] = 1
 
     def __post_init__(self):
         object.__setattr__(self, "backend", get_backend(self.backend))
@@ -581,23 +597,12 @@ def _block_graph_fragment(tpc: TPContext, params, cfg, kind: str, idx: int,
     return nodes, out, aux, weights, specs
 
 
-def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str],
-              prefix_len: int = 0, norm_kind: str = "rmsnorm",
-              seq_sharded: bool = True):
-    """A whole ``layer_pattern`` period — every block in ``kinds`` with its
-    params from ``params_seq`` — built as ONE dataflow graph, optimized, and
-    executed in ONE ``shard_map``. This is the unit the paper's graph-level
-    optimizer actually evaluates: with ≥2 blocks, pass 2 fuses the
-    block→block seam (block k's FFN-out RS → residual → block k+1's LN1 →
-    QKV shared gather, and the MoE rs → residual → ln → route variant) that
-    no per-block graph can see, and pass 3's deterministic
-    nearest-pair policy co-schedules whatever independent RS/AG pairs the
-    merged graph exposes.
-
-    x: (B, S, d), sequence-sharded when ``seq_sharded`` (the training path)
-    or replicated when not (the decode/ragged-S allreduce path, dense blocks
-    only). Returns (period output, summed aux loss)."""
-    dtype = x.dtype
+def _period_graph(tpc: TPContext, params_seq, cfg, kinds: Sequence[str],
+                  prefix_len: int = 0, dtype=jnp.float32,
+                  seq_sharded: bool = True):
+    """The single-chain period graph :func:`sp_period` executes: every block
+    in ``kinds`` chained through per-block ``b{i}.`` namespaces from input
+    ``x``. Returns (graph, weights dict, specs dict, aux value names)."""
     nodes = [df.Node("x", "input")]
     weights, specs, aux_vals = {}, {}, []
     src = "x"
@@ -615,17 +620,118 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str],
         specs.update(s)
         if aux is not None:
             aux_vals.append(aux)
-    graph = df.optimize(df.Graph(nodes, outputs=(src,) + tuple(aux_vals)))
+    graph = df.Graph(nodes, outputs=(src,) + tuple(aux_vals))
+    return graph, weights, specs, tuple(aux_vals)
+
+
+def microbatch_period_graph(base: df.Graph, num_microbatches: int) -> df.Graph:
+    """``num_microbatches`` independent copies of a single-chain period graph
+    merged into ONE graph (``mb{i}.``-prefixed values, SHARED weight keys) —
+    the in-model microbatch split. After ``optimize()`` pass 3 cross-pairs
+    collectives from different chains (``overlap_asym``), which a
+    straight-line period can never expose. ``num_microbatches=1`` returns
+    ``base`` unchanged (the unsplit path, bit-identical)."""
+    if num_microbatches <= 1:
+        return base
+    return df.merge_graphs([base] * num_microbatches, share_weights=True)
+
+
+def resolve_microbatches(tpc: TPContext, x,
+                         requested: Union[int, str, None] = None,
+                         moe: bool = False) -> int:
+    """The effective period-graph batch split for activation ``x``
+    ((B, S, d), global). ``requested=None`` defers to
+    ``tpc.num_microbatches``; ``"auto"`` asks
+    :func:`repro.core.coordination.plan_microbatches` with the per-device
+    batch and the full gathered-activation payload. The result is clamped
+    to the largest value that divides the per-device batch (1 = unsplit).
+
+    ``moe=True`` (the period contains MoE blocks) disables ``"auto"``
+    splitting: the MoE load-balance aux loss is a per-(micro)batch
+    statistic that is NOT linear over sub-batches, so splitting changes
+    the training objective's aux term — that trade-off must be an explicit
+    integer opt-in, never a silent default."""
+    req = tpc.num_microbatches if requested is None else requested
+    b_loc = max(int(x.shape[0]) // max(sharding.dp_size(tpc.mesh), 1), 1)
+    if req == "auto":
+        if moe:
+            return 1
+        payload = b_loc * int(x.shape[1]) * int(x.shape[2]) * \
+            np.dtype(x.dtype).itemsize
+        mb = coordination.plan_microbatches(b_loc, float(payload), tpc.tp,
+                                            bidirectional=
+                                            tpc.cais.bidirectional)
+    else:
+        mb = int(req)
+    mb = max(1, min(mb, b_loc))
+    while b_loc % mb:
+        mb -= 1
+    return mb
+
+
+def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str],
+              prefix_len: int = 0, norm_kind: str = "rmsnorm",
+              seq_sharded: bool = True,
+              num_microbatches: Union[int, str, None] = None):
+    """A whole ``layer_pattern`` period — every block in ``kinds`` with its
+    params from ``params_seq`` — built as ONE dataflow graph, optimized, and
+    executed in ONE ``shard_map``. This is the unit the paper's graph-level
+    optimizer actually evaluates: with ≥2 blocks, pass 2 fuses the
+    block→block seam (block k's FFN-out RS → residual → block k+1's LN1 →
+    QKV shared gather, and the MoE rs → residual → ln → route variant) that
+    no per-block graph can see, and pass 3's deterministic
+    nearest-pair policy co-schedules whatever independent RS/AG pairs the
+    merged graph exposes.
+
+    ``num_microbatches`` (default: the :class:`TPContext` knob; ``"auto"``
+    → :func:`resolve_microbatches`) splits the batch axis into that many
+    independent per-microbatch chains merged into the SAME graph with
+    shared weights — a straight-line period is fully serialized after
+    pass-2 fusion, so this split is what gives pass 3 the independent
+    cross-chain pairs it turns into ``overlap_asym`` in the model path.
+    The split, per-chain execution, and output re-concatenation all happen
+    inside the one ``shard_map``. Block OUTPUTS are exactly preserved
+    (≤1e-6, pinned in ``multidev_checks``). The MoE aux loss is NOT: each
+    chain routes with its own capacity and the load-balance statistic is
+    not linear over sub-batches, so the split period reports the mean of
+    per-chain aux values, which differs from the full-batch statistic.
+    ``"auto"`` therefore never splits an MoE period — an explicit integer
+    is the opt-in that accepts the changed aux term.
+
+    x: (B, S, d), sequence-sharded when ``seq_sharded`` (the training path)
+    or replicated when not (the decode/ragged-S allreduce path, dense blocks
+    only). Returns (period output, summed aux loss)."""
+    dtype = x.dtype
+    base, weights, specs, aux_vals = _period_graph(
+        tpc, params_seq, cfg, kinds, prefix_len=prefix_len, dtype=dtype,
+        seq_sharded=seq_sharded)
+    mb = resolve_microbatches(tpc, x, num_microbatches,
+                              moe=bool(aux_vals))
+    graph = df.optimize(microbatch_period_graph(base, mb))
     names = list(weights)
+    n_aux = len(aux_vals)
 
     def local(x, *ws):
-        return df.execute(graph, {"x": x}, dict(zip(names, ws)),
-                          axis=MODEL, cais=tpc.cais, norm=norm_kind,
-                          backend=tpc.backend)
+        wmap = dict(zip(names, ws))
+        if mb == 1:
+            return df.execute(graph, {"x": x}, wmap, axis=MODEL,
+                              cais=tpc.cais, norm=norm_kind,
+                              backend=tpc.backend)
+        res = df.execute(
+            graph,
+            {f"mb{i}.x": xi
+             for i, xi in enumerate(jnp.split(x, mb, axis=0))},
+            wmap, axis=MODEL, cais=tpc.cais, norm=norm_kind,
+            backend=tpc.backend)
+        per = 1 + n_aux
+        out = jnp.concatenate([res[i * per] for i in range(mb)], axis=0)
+        auxes = tuple(sum(res[i * per + 1 + j] for i in range(mb)) / mb
+                      for j in range(n_aux))
+        return (out,) + auxes
 
     x_spec = (BATCH, MODEL, None) if seq_sharded else (BATCH, None, None)
     in_specs = [x_spec] + [specs[k] for k in names]
-    out_specs = [x_spec] + [(MODEL,)] * len(aux_vals)
+    out_specs = [x_spec] + [(MODEL,)] * n_aux
     res = _smap(tpc, local, in_specs, out_specs)(x, *weights.values())
     aux = jnp.float32(0.0)
     for a in res[1:]:
@@ -635,7 +741,8 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str],
 
 def sp_block(tpc: TPContext, x, params, cfg, kind: str = "attn",
              prefix_len: int = 0, norm_kind: str = "rmsnorm",
-             seq_sharded: bool = True):
+             seq_sharded: bool = True,
+             num_microbatches: Union[int, str, None] = None):
     """A whole pre-norm transformer block — attention residual → FFN/MoE
     residual — as a single-block period (see :func:`sp_period`): ONE
     dataflow graph, optimized, executed in ONE ``shard_map``. The graph
@@ -648,7 +755,8 @@ def sp_block(tpc: TPContext, x, params, cfg, kind: str = "attn",
     (or replicated with ``seq_sharded=False`` — the decode-style allreduce
     schedule). Returns (block output, aux loss)."""
     return sp_period(tpc, x, (params,), cfg, (kind,), prefix_len=prefix_len,
-                     norm_kind=norm_kind, seq_sharded=seq_sharded)
+                     norm_kind=norm_kind, seq_sharded=seq_sharded,
+                     num_microbatches=num_microbatches)
 
 
 def tp_applicable(cfg, kind: str, tp: int) -> bool:

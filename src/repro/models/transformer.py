@@ -84,7 +84,8 @@ def _tp_context(rt: Runtime):
         return None
     return TPContext(mesh=mesh, backend=backend,
                      cais=CAISConfig(num_chunks=rt.cais_chunks,
-                                     bidirectional=rt.cais_bidirectional))
+                                     bidirectional=rt.cais_bidirectional),
+                     num_microbatches=rt.tp_microbatches)
 
 
 def _sp_axis(rt: Runtime, x):
@@ -304,7 +305,11 @@ def _blocks_forward(kinds, params_seq, x, cfg: ArchConfig, rt: Runtime,
     the run executes as ONE period-level dataflow graph in one ``shard_map``
     (``tp_mod.sp_period``) — the optimizer sees the block→block seams, so
     pass 2's cross-block RS→residual→LN→AG fusion and pass 3's asymmetric
-    pairing fire inside the model path. Otherwise falls back per block."""
+    pairing fire inside the model path. ``rt.tp_microbatches`` (via
+    ``TPContext``) additionally splits the period into independent
+    microbatch chains inside that one graph, the structure pass 3 needs to
+    emit ``overlap_asym`` at all on a straight-line period. Otherwise falls
+    back per block."""
     from repro.core import tp as tp_mod
 
     tpc = _tp_context(rt)

@@ -6,7 +6,7 @@ different distribution/precision strategies (baseline vs CAIS vs hillclimbed).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Union
 
 import jax.numpy as jnp
 
@@ -25,6 +25,14 @@ class Runtime:
     # chunking per collective from payload bytes via coordination.plan()
     cais_chunks: Optional[int] = None
     cais_bidirectional: bool = True     # asymmetric/bidirectional overlap
+    # period-graph batch split: the explicit model path splits each
+    # layer_pattern period into this many independent microbatch chains
+    # inside ONE graph/shard_map so pass 3 can cross-pair their collectives
+    # (overlap_asym). int, or "auto" (coordination.plan_microbatches); 1 =
+    # unsplit (bit-identical to the pre-split path). "auto" never splits
+    # MoE periods — their aux loss is a per-batch statistic that splitting
+    # changes, so that trade-off needs an explicit integer opt-in
+    tp_microbatches: Union[int, str] = 1
     # memory
     remat: bool = True                  # activation checkpointing per period
     loss_chunk: int = 512               # CE computed in seq chunks (big vocabs)

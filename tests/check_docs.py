@@ -1,0 +1,45 @@
+"""Docs sanity checker (CI: ``python -m tests.check_docs``).
+
+Every fenced ``` code block in README.md and docs/*.md must be closed, and
+every repo path the docs reference (backticked or markdown-linked) must
+exist in the tree — so the docs cannot silently rot as files move.
+``tests/test_docs.py`` wraps this for tier-1.
+"""
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+# repo-relative paths as they appear in docs: `src/...`, (docs/backends.md), …
+PATH_RE = re.compile(
+    r"[`(]((?:src|docs|tests|benchmarks|examples|\.github)/[\w./-]+"
+    r"|[A-Z][A-Z_a-z0-9]*\.md|pytest\.ini|requirements-dev\.txt)[`)]")
+
+
+def check_file(md: pathlib.Path) -> list:
+    text = md.read_text()
+    errs = []
+    if text.count("```") % 2:
+        errs.append(f"{md.relative_to(ROOT)}: unbalanced ``` code fence")
+    for ref in sorted({m.group(1) for m in PATH_RE.finditer(text)}):
+        if not (ROOT / ref).exists():
+            errs.append(f"{md.relative_to(ROOT)}: referenced path {ref!r} "
+                        f"does not exist")
+    return errs
+
+
+def main() -> int:
+    mds = [p for p in [ROOT / "README.md",
+                       *sorted((ROOT / "docs").glob("*.md"))] if p.exists()]
+    if not mds:
+        print("check_docs: no README.md or docs/*.md found", file=sys.stderr)
+        return 1
+    errs = [e for md in mds for e in check_file(md)]
+    for e in errs:
+        print(f"DOCS {e}", file=sys.stderr)
+    print(f"check_docs: {len(mds)} files, {len(errs)} problems")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

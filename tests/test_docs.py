@@ -1,0 +1,8 @@
+"""Tier-1 wrapper around the docs checker CI runs as
+``python -m tests.check_docs`` — README/docs code fences balanced, every
+referenced repo path exists."""
+from tests.check_docs import main
+
+
+def test_docs_fences_and_paths():
+    assert main() == 0

@@ -1,7 +1,16 @@
 """Period-level dataflow graphs (ISSUE 3 tentpole): ≥2 blocks of a
 ``layer_pattern`` period concatenated into ONE graph, so the optimizer sees
 the block→block seams — plus the merge_graphs weight-prefixing semantics and
-the deterministic pass-3 pairing policy that ride along."""
+the deterministic pass-3 pairing policy that ride along.
+
+ISSUE 5 adds the in-model microbatch split: ``sp_period(num_microbatches=n)``
+merges n independent per-microbatch chains into that one graph
+(shared weights), which is what finally lets pass 3 emit ``overlap_asym``
+inside the model path — a straight-line period is fully serialized after
+pass-2 fusion. Covered here: the split graph carries ≥1 ``overlap_asym``,
+``optimize()`` stays idempotent on it, ``num_microbatches=1`` is
+bit-identical to the unsplit path, and ``pair_asymmetric`` refuses
+same-chain pairs (the chain-id guard)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -176,6 +185,136 @@ def test_pair_asymmetric_deterministic_nearest_first():
     # nearest-first: mb0's FFN-out RS pairs with mb1's attention gather —
     # the adjacent seam, not an arbitrary first match
     assert pairs[0].name == "mb0.rs2+mb1.q+mb1.k+mb1.v", pairs[0].name
+
+
+def test_pair_asymmetric_same_chain_guard():
+    """Chain-id guard (ISSUE 5 satellite): a gemm_rs/ag_gemm pair fed by the
+    SAME microbatch's data — dependency-free only because of a fork off one
+    input — must NOT pair even though topo distance ranks it nearest;
+    pairing would lockstep-serialize the chain against itself. The
+    two-input twin (independent microbatches) still pairs."""
+    nodes = [
+        df.Node("x", "input"),
+        df.Node("ga", "gemm_row", ("x",), ("wa",)),
+        df.Node("rsa", "reduce_scatter", ("ga",)),
+        df.Node("agb", "allgather", ("x",)),
+        df.Node("gb", "gemm_col", ("agb",), ("wb",)),
+    ]
+    opt = df.optimize(df.Graph(nodes, outputs=("rsa", "gb")))
+    ops = {n.op for n in opt.nodes}
+    assert "overlap_asym" not in ops, [(n.name, n.op) for n in opt.nodes]
+    assert {"gemm_rs", "ag_gemm"} <= ops
+    # the dual-INPUT version is two chains: pass 3 pairs it as before
+    dual = df.optimize(df.dual_sublayer_graph())
+    assert [n.op for n in dual.nodes if n.op != "input"] == ["overlap_asym"]
+
+
+def _split_period_graph(num_microbatches, n_blocks=2):
+    """The graph sp_period actually builds for a dense period at the given
+    microbatch split, via the same builder seam it uses."""
+    from repro import sharding
+    from repro.core.primitives import CAISConfig
+
+    mesh = sharding.make_mesh((1, 1), ("data", "model"))
+    tpc = tp.TPContext(mesh=mesh, backend="cais",
+                       cais=CAISConfig(num_chunks=1))
+    from repro.configs import get_arch
+    import repro.models.transformer as tr
+    cfg = get_arch("deepseek-7b").smoke().scaled(
+        num_layers=n_blocks, d_model=32, num_heads=4, num_kv_heads=4,
+        head_dim=8, d_ff=48)
+    kinds = ("attn",) * n_blocks
+    ps = [tr.init_block(jax.random.key(60 + i), k, cfg, jnp.float32)
+          for i, k in enumerate(kinds)]
+    base, _, _, _ = tp._period_graph(tpc, ps, cfg, kinds)
+    return tp.microbatch_period_graph(base, num_microbatches)
+
+
+def test_microbatch_split_period_unlocks_overlap_asym():
+    """Acceptance (ISSUE 5): the straight-line dense period is fully
+    serialized after pass-2 fusion (no overlap_asym), while the
+    microbatch-split period graph — the one sp_period builds for
+    num_microbatches=2 — carries ≥1 pass-3 overlap_asym node pairing
+    collectives from DIFFERENT chains."""
+    unsplit = df.optimize(_split_period_graph(1))
+    assert not any(n.op == "overlap_asym" for n in unsplit.nodes)
+    opt = df.optimize(_split_period_graph(2))
+    pairs = [n for n in opt.nodes if n.op == "overlap_asym"]
+    assert pairs, [(n.name, n.op) for n in opt.nodes]
+    # the pair really crosses chains: its name carries both mb prefixes
+    assert any("mb0." in n.name and "mb1." in n.name for n in pairs), \
+        [n.name for n in pairs]
+
+
+def test_microbatch_split_period_optimize_idempotent():
+    opt = df.optimize(_split_period_graph(2))
+    opt2 = df.optimize(opt)
+    assert [(n.name, n.op) for n in opt.nodes] == \
+        [(n.name, n.op) for n in opt2.nodes]
+
+
+def test_sp_period_microbatch_parity_and_identity():
+    """num_microbatches=1 must be BIT-identical to the default (unsplit)
+    path; num_microbatches=2 and "auto" must pin ≤1e-6 against it (exact on
+    a tp=1 mesh: the split is pure batch reshaping)."""
+    import repro.models.transformer as tr
+    from repro import sharding
+    from repro.configs import get_arch
+    from repro.core.primitives import CAISConfig
+
+    cfg = get_arch("deepseek-7b").smoke().scaled(
+        num_layers=2, d_model=32, num_heads=4, num_kv_heads=4, head_dim=8,
+        d_ff=48)
+    mesh = sharding.make_mesh((1, 1), ("data", "model"))
+    tpc = tp.TPContext(mesh=mesh, backend="cais",
+                       cais=CAISConfig(num_chunks=1))
+    kinds = ("attn", "attn")
+    ps = [tr.init_block(jax.random.key(7 + i), k, cfg, jnp.float32)
+          for i, k in enumerate(kinds)]
+    x = jax.random.normal(jax.random.key(8), (4, 16, 32), jnp.float32)
+    got1, _ = tp.sp_period(tpc, x, ps, cfg, kinds)
+    got1b, _ = tp.sp_period(tpc, x, ps, cfg, kinds, num_microbatches=1)
+    assert (np.asarray(got1) == np.asarray(got1b)).all()
+    got2, _ = tp.sp_period(tpc, x, ps, cfg, kinds, num_microbatches=2)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(got1), atol=1e-6)
+    gota, _ = tp.sp_period(tpc, x, ps, cfg, kinds, num_microbatches="auto")
+    np.testing.assert_allclose(np.asarray(gota), np.asarray(got1), atol=1e-6)
+    # the TPContext knob is the default the argument overrides
+    tpc2 = tp.TPContext(mesh=mesh, backend="cais",
+                        cais=CAISConfig(num_chunks=1), num_microbatches=2)
+    gotk, _ = tp.sp_period(tpc2, x, ps, cfg, kinds)
+    np.testing.assert_allclose(np.asarray(gotk), np.asarray(got2), atol=0)
+
+
+def test_resolve_microbatches_clamps_to_batch_divisors():
+    from repro import sharding
+    from repro.core.primitives import CAISConfig
+
+    mesh = sharding.make_mesh((1, 1), ("data", "model"))
+    tpc = tp.TPContext(mesh=mesh, backend="cais", cais=CAISConfig())
+    x = jnp.zeros((6, 16, 32))
+    assert tp.resolve_microbatches(tpc, x, 4) == 3   # largest divisor ≤ 4
+    assert tp.resolve_microbatches(tpc, x, 2) == 2
+    assert tp.resolve_microbatches(tpc, jnp.zeros((1, 16, 32)), 8) == 1
+    assert tp.resolve_microbatches(tpc, x) == 1      # knob default: unsplit
+    # "auto" never splits an MoE period (its aux statistic is not linear
+    # over sub-batches) — only an explicit integer opts in
+    assert tp.resolve_microbatches(tpc, x, "auto", moe=True) == 1
+    assert tp.resolve_microbatches(tpc, x, 2, moe=True) == 2
+
+
+def test_plan_microbatches_heuristic():
+    """coordination.plan_microbatches: split only while each chain's α-β
+    plan keeps ≥2 latency-healthy chunks, never beyond batch divisibility."""
+    from repro.core import coordination as co
+
+    assert co.plan_microbatches(4, 256e6, 4) > 1     # big payload: split
+    assert co.plan_microbatches(4, 4096, 4) == 1     # latency floor: don't
+    assert co.plan_microbatches(1, 256e6, 4) == 1    # nothing to split
+    assert co.plan_microbatches(4, 256e6, 1) == 1    # no ring, no point
+    assert co.plan_microbatches(3, 256e6, 4) == 1    # 2 does not divide 3
+    assert co.plan_microbatches(8, 1e9, 8,
+                                max_microbatches=8) in (2, 4, 8)
 
 
 def test_remat_covers_rem_tail():
