@@ -6,10 +6,12 @@ shard_map, pass-2 seam fusion) against the PR-1 per-sub-layer composition
 2 blocks in ONE shard_map with the cross-block seam fused) against the
 per-block ``sp_block`` composition, and the microbatch-split period
 (``num_microbatches=2`` — two independent chains in one graph, pass-3
-``overlap_asym`` across them) against the unsplit serialized period. With
+``overlap_asym`` across them) against the unsplit serialized period, and
+the perfsim-planned period (``tp_planner="perfsim"``, docs/planner.md)
+against the same split period under the greedy planner. With
 ``$REPRO_BENCH_JSON`` set, every row (including the subprocess cells) is
 dumped as the JSON baseline the CI slow-suite commits as
-``BENCH_pr3.json`` — a ``meta.sublayer_env`` row records the shapes/mode
+``BENCH_pr6.json`` — a ``meta.sublayer_env`` row records the shapes/mode
 so baselines regenerated under different settings are not silently
 compared. Measured cells run on CPU-emulated virtual devices, where
 ``collective_permute`` chains serialize (no real bidirectional links), so
@@ -100,6 +102,21 @@ def _block_child() -> None:
         t_split2 = time_fn(split2, x)
         emit(f"period.split_vs_unsplit.{mode}", t_split2,
              f"unsplit_us={t_period:.0f} speedup={t_period / t_split2:.2f}x")
+
+        # perfsim-planned period (tp_planner="perfsim": the pass-3 pairing
+        # and chunking come from the simulated-makespan search, memoized in
+        # the plan cache under reports/plans/ — the artifact the 8-device CI
+        # job uploads) vs the same split period under the greedy planner
+        tpc_p = tp_mod.TPContext(mesh=mesh, backend=mode,
+                                 cais=CAISConfig(num_chunks=2),
+                                 planner="perfsim")
+        planned = jax.jit(
+            lambda x, tpc=tpc_p: tp_mod.sp_period(
+                tpc, x, params2, cfg, ("attn", "attn"),
+                num_microbatches=2)[0])
+        t_planned = time_fn(planned, x)
+        emit(f"planner.perfsim_vs_greedy.{mode}", t_planned,
+             f"greedy_us={t_split2:.0f} speedup={t_split2 / t_planned:.2f}x")
 
 
 def run() -> None:

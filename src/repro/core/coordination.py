@@ -20,6 +20,7 @@ microbatch chains a period graph should split into (``tp.sp_period``'s
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 
@@ -34,6 +35,10 @@ class SchedulePlan:
     total_comm: float           # full ring traversal (s)
     latency_fraction: float     # α / per-chunk time — merge-window pressure
     overlap_efficiency: float   # fraction of wire time hideable behind compute
+    # the staging-bytes budget forced num_chunks past the latency cap
+    # (max_chunks): the budget wins, but callers can see it happened instead
+    # of silently getting c > max_chunks
+    over_cap: bool = False
 
 
 def schedule_metrics(payload_bytes: float, ring: int, num_chunks: int,
@@ -72,11 +77,22 @@ def schedule_metrics(payload_bytes: float, ring: int, num_chunks: int,
 
 def plan(payload_bytes: float, ring: int, *, compute_time: float = 0.0,
          staging_budget: int = 4 * 1024**2, max_latency_fraction: float = 0.25,
-         bidirectional: bool = True, hw: HWSpec = V5E) -> SchedulePlan:
+         bidirectional: bool = True, max_chunks: int = 64,
+         hw: HWSpec = V5E) -> SchedulePlan:
     """Pick num_chunks: the largest chunking (finest overlap) whose per-chunk
     latency fraction stays below ``max_latency_fraction``, subject to the
     staging buffer fitting ``staging_budget``. Mirrors the paper's finding
-    that coordination lets a small merge table (40 KB/port) suffice."""
+    that coordination lets a small merge table (40 KB/port) suffice.
+
+    The latency cap ``max_chunks`` bounds the chunk count from above; the
+    staging budget bounds it from below (``c >= shard / budget``). When the
+    two conflict the budget wins (staging bytes are a hard resource), and the
+    returned plan flags ``over_cap=True`` instead of silently exceeding the
+    cap. With ``compute_time > 0`` the planner additionally prefers the
+    finest chunking whose full wire time still fits UNDER the available
+    compute time — ``total_comm(c) = (ring-1)·(c·α + shard/(dirs·bw))`` grows
+    with c, so past the point where wire time stops hiding behind compute,
+    extra chunks only add exposed hop latency."""
     shard = payload_bytes / ring
     # latency bound: chunk >= α·β·(1/maxfrac - 1)
     dirs = 2 if bidirectional else 1
@@ -85,9 +101,17 @@ def plan(payload_bytes: float, ring: int, *, compute_time: float = 0.0,
     c_latency = max(1, int(shard / max(min_chunk, 1.0)))
     # staging bound: chunk <= budget  =>  c >= shard / budget
     c_staging = max(1, math.ceil(shard / staging_budget))
-    c = max(c_staging, min(c_latency, 64))
-    return schedule_metrics(payload_bytes, ring, c, compute_time,
-                            bidirectional, hw)
+    c_hi = max(c_staging, min(c_latency, max_chunks))
+    c = c_hi
+    if compute_time > 0 and ring > 1 and hw.hop_latency > 0:
+        # finest c whose total wire time fits under compute_time:
+        # (ring-1)·(c·α + shard/(dirs·bw)) <= compute_time
+        slack = compute_time / (ring - 1) - shard / (dirs * hw.ici_bw)
+        c_fit = int(slack / hw.hop_latency) if slack > 0 else 0
+        c = min(c_hi, max(c_staging, c_fit))
+    p = schedule_metrics(payload_bytes, ring, c, compute_time,
+                         bidirectional, hw)
+    return dataclasses.replace(p, over_cap=c_staging > max_chunks)
 
 
 def plan_microbatches(batch: int, payload_bytes: float, ring: int, *,

@@ -369,30 +369,20 @@ def _input_ancestors(g: Graph, nodes: List[Node]) -> Dict[str, frozenset]:
     return anc
 
 
-def pair_asymmetric(g: Graph) -> Graph:
-    """Pass 3: co-schedule an independent gemm_rs + ag_gemm[_multi] pair so
-    their complementary ring directions share the links each step (e.g. one
-    microbatch's FFN-out RS against another's attention-in gather).
+def asymmetric_candidates(g: Graph) -> List[Tuple[Node, Node]]:
+    """Every legal pass-3 pair of ``g``, ranked nearest-independent-first.
 
-    Pairing policy (deterministic, nearest-independent-pair-first): every
-    candidate (gemm_rs, ag_gemm[_multi]) pair with no dependency path either
-    way is ranked by topological distance, ties broken by earliest topo
-    position and then by node name — so a merged microbatch/period graph
-    co-schedules the *adjacent* seam (chain k's FFN-out RS with the nearest
-    independent attention gather of chain k+1) instead of whatever pair node
-    order happened to surface first. Repeats until no independent pair
-    remains; the result is a fixed point of the pass.
-
-    Chain-id guard: both collectives must additionally come from different
-    chains (disjoint ``input``-ancestor sets). The overlap primitive runs
-    its two streams in lockstep, so pairing two collectives fed by the SAME
-    microbatch's data — dependency-free only because of a fork — would
-    serialize that chain against itself instead of overlapping independent
-    work."""
+    A candidate is a (gemm_rs, ag_gemm[_multi]) pair with no dependency path
+    either way AND disjoint ``input``-ancestor sets (the chain-id guard: the
+    overlap primitive runs its streams in lockstep, so two collectives fed
+    by the same microbatch's data — dependency-free only because of a fork —
+    must never pair). Ranking: topological distance, ties broken by earliest
+    topo position and then by node names — the greedy pass takes the head of
+    this list; the perfsim planner scores *alternative* orders."""
     nodes = _topo(list(g.nodes), g.outputs)
     order = {n.name: i for i, n in enumerate(nodes)}
     chain = _input_ancestors(g, nodes)
-    best = None
+    cands = []
     for a in nodes:
         if a.op != "gemm_rs":
             continue
@@ -405,25 +395,78 @@ def pair_asymmetric(g: Graph) -> Graph:
                 continue
             key = (abs(order[a.name] - order[b.name]),
                    min(order[a.name], order[b.name]), a.name, b.name)
-            if best is None or key < best[0]:
-                best = (key, a, b)
-    if best is None:
-        return Graph(nodes, g.outputs)
-    _, a, b = best
+            cands.append((key, a, b))
+    cands.sort(key=lambda t: t[0])
+    return [(a, b) for _, a, b in cands]
+
+
+def apply_pair(g: Graph, a: Node, b: Node) -> Graph:
+    """Fuse one (gemm_rs, ag_gemm[_multi]) candidate into ``overlap_asym``."""
     fused = Node(f"{a.name}+{b.name}", "overlap_asym",
                  a.inputs + b.inputs, a.weights + b.weights,
                  outputs=(a.name,) + b.outputs)
-    nodes = [x for x in nodes if x.name not in (a.name, b.name)]
+    nodes = [x for x in g.nodes if x.name not in (a.name, b.name)]
     nodes.append(fused)
-    return pair_asymmetric(Graph(_topo(nodes, g.outputs), g.outputs))
+    return Graph(_topo(nodes, g.outputs), g.outputs)
 
 
-def optimize(g: Graph, asymmetric: bool = True) -> Graph:
+def pair_asymmetric(g: Graph,
+                    pairing: Optional[Sequence[Tuple[str, str]]] = None
+                    ) -> Graph:
+    """Pass 3: co-schedule independent gemm_rs + ag_gemm[_multi] pairs so
+    their complementary ring directions share the links each step (e.g. one
+    microbatch's FFN-out RS against another's attention-in gather).
+
+    Default policy (deterministic, nearest-independent-pair-first): fuse the
+    head of :func:`asymmetric_candidates` and repeat until no independent
+    pair remains — a merged microbatch/period graph co-schedules the
+    *adjacent* seam (chain k's FFN-out RS with the nearest independent
+    attention gather of chain k+1) rather than an arbitrary first match.
+
+    With an explicit ``pairing`` — an ordered sequence of (gemm_rs name,
+    ag_gemm name) — the pass instead applies exactly those pairs, in order
+    (a planner decision, see :mod:`repro.plan.search`). Each named pair must
+    still be a legal candidate when its turn comes (earlier fusions change
+    the dependency structure); an illegal pair raises :class:`GraphError`
+    so a stale cached plan fails loudly rather than silently reordering."""
+    if pairing is not None:
+        for rs_name, ag_name in pairing:
+            cand = {(a.name, b.name): (a, b)
+                    for a, b in asymmetric_candidates(g)}
+            if (rs_name, ag_name) not in cand:
+                raise GraphError(
+                    f"planner pairing ({rs_name!r}, {ag_name!r}) is not a "
+                    f"legal independent pair of this graph")
+            g = apply_pair(g, *cand[(rs_name, ag_name)])
+        return g
+    cands = asymmetric_candidates(g)
+    if not cands:
+        return Graph(_topo(list(g.nodes), g.outputs), g.outputs)
+    return pair_asymmetric(apply_pair(g, *cands[0]))
+
+
+def optimize(g: Graph, asymmetric: bool = True, planner=None) -> Graph:
+    """Run passes 1 → 1b → 2 → 3. ``planner`` drives pass 3's pairing order:
+
+    - ``None`` / ``"greedy"`` — the deterministic nearest-independent-first
+      policy (the default, unchanged behaviour);
+    - ``"perfsim"`` — a :class:`repro.plan.search.PerfsimPlanner` with
+      synthesized shapes: candidate pairings are scored by simulated
+      makespan over the perfsim cost model and the argmin wins;
+    - any object with a ``pair(g) -> Graph`` method — e.g. a PerfsimPlanner
+      carrying the real shapes/topology (the ``tp.sp_period`` path).
+    """
     g = fuse_compute_aware(g)
     g = fuse_shared_gather(g)
     g = fuse_sublayer_chain(g)
     if asymmetric:
-        g = pair_asymmetric(g)
+        if planner is None or planner == "greedy":
+            g = pair_asymmetric(g)
+        else:
+            if planner == "perfsim":
+                from repro.plan import PerfsimPlanner
+                planner = PerfsimPlanner()
+            g = planner.pair(g)
     return g
 
 

@@ -62,12 +62,20 @@ class TPContext:
     instance at construction. ``num_microbatches`` is the period-graph
     batch split (int, or ``"auto"`` to size it from the α-β model via
     :func:`repro.core.coordination.plan_microbatches`); 1 disables
-    splitting."""
+    splitting. ``planner`` drives pass 3 of the graph optimizer:
+    ``"greedy"`` (deterministic nearest-independent-first, the default) or
+    ``"perfsim"`` (the :mod:`repro.plan` search: simulated-makespan argmin
+    over pairings/chunks/microbatch splits, memoized in the plan cache).
+    ``hw`` is the α-β target-hardware model the microbatch planner and the
+    perfsim fabric read — injectable so tests can pin behaviour with a
+    scaled-down fabric."""
 
     mesh: Mesh
     backend: Union[str, CollectiveBackend] = "cais"
     cais: CAISConfig = CAISConfig()
     num_microbatches: Union[int, str] = 1
+    planner: str = "greedy"
+    hw: "coordination.HWSpec" = coordination.V5E
 
     def __post_init__(self):
         object.__setattr__(self, "backend", get_backend(self.backend))
@@ -660,13 +668,48 @@ def resolve_microbatches(tpc: TPContext, x,
             np.dtype(x.dtype).itemsize
         mb = coordination.plan_microbatches(b_loc, float(payload), tpc.tp,
                                             bidirectional=
-                                            tpc.cais.bidirectional)
+                                            tpc.cais.bidirectional,
+                                            hw=tpc.hw)
     else:
         mb = int(req)
     mb = max(1, min(mb, b_loc))
     while b_loc % mb:
         mb -= 1
     return mb
+
+
+def _plan_period(tpc: TPContext, base: df.Graph, weights, x,
+                 requested: Union[int, str, None], moe: bool):
+    """The (num_microbatches, pass-3 planner) decision for one period graph
+    under ``tpc.planner``.
+
+    ``"greedy"`` keeps the α-β heuristic split (:func:`resolve_microbatches`)
+    and the nearest-first pairing (planner None). ``"perfsim"`` hands the
+    whole decision to :func:`repro.plan.search.period_planner`: microbatch
+    candidates (the α-β path's power-of-two menu; an explicit integer
+    request stays fixed — the planner then only decides pairing/chunking;
+    MoE periods never auto-split, same contract as the greedy path) are
+    scored by simulated makespan together with pass-3 pairings and chunk
+    counts, memoized in the process-wide plan cache."""
+    if tpc.planner != "perfsim":
+        return resolve_microbatches(tpc, x, requested, moe), None
+    from repro import plan as plan_mod
+
+    req = tpc.num_microbatches if requested is None else requested
+    b_loc = max(int(x.shape[0]) // max(sharding.dp_size(tpc.mesh), 1), 1)
+    if req == "auto":
+        cands = (1,) if moe else tuple(
+            m for m in (1, 2, 4) if m <= b_loc and b_loc % m == 0)
+    else:
+        cands = (resolve_microbatches(tpc, x, requested, moe),)
+    x_shape = (b_loc, int(x.shape[1]), int(x.shape[2]))
+    plan, pairer = plan_mod.period_planner(
+        base, x_shape=x_shape,
+        weight_shapes={k: tuple(v.shape) for k, v in weights.items()},
+        dtype_bytes=np.dtype(x.dtype).itemsize, tp=tpc.tp,
+        backend=tpc.mode, mb_candidates=cands, hw=tpc.hw,
+        cache=plan_mod.default_cache())
+    return plan.num_microbatches, pairer
 
 
 def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str],
@@ -705,9 +748,9 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str],
     base, weights, specs, aux_vals = _period_graph(
         tpc, params_seq, cfg, kinds, prefix_len=prefix_len, dtype=dtype,
         seq_sharded=seq_sharded)
-    mb = resolve_microbatches(tpc, x, num_microbatches,
-                              moe=bool(aux_vals))
-    graph = df.optimize(microbatch_period_graph(base, mb))
+    mb, planner = _plan_period(tpc, base, weights, x, num_microbatches,
+                               moe=bool(aux_vals))
+    graph = df.optimize(microbatch_period_graph(base, mb), planner=planner)
     names = list(weights)
     n_aux = len(aux_vals)
 

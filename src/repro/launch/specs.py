@@ -36,7 +36,8 @@ _ROW = {"wo", "w_out"}
 
 def runtime_for(cfg: ArchConfig, tp_mode: str = "auto",
                 cais_chunks: Optional[int] = None,
-                tp_microbatches="auto") -> Runtime:
+                tp_microbatches="auto",
+                tp_planner: str = "greedy") -> Runtime:
     """Per-arch runtime defaults for the production meshes. ``tp_mode`` is
     any registered collective backend name; ``cais_chunks=None`` lets the
     cais backend plan the chunking per collective; ``tp_microbatches``
@@ -44,11 +45,13 @@ def runtime_for(cfg: ArchConfig, tp_mode: str = "auto",
     microbatch chains (pass-3 ``overlap_asym``) whenever the planner says
     the per-chain payload stays latency-healthy — except MoE periods,
     which ``"auto"`` never splits (their aux loss is a per-batch statistic
-    the split would change; pass an explicit int to opt in)."""
+    the split would change; pass an explicit int to opt in).
+    ``tp_planner="perfsim"`` opts the period optimizer into the
+    :mod:`repro.plan` simulated-makespan search (``"greedy"`` default)."""
     param_dtype = "bfloat16" if cfg.param_count() > 6e10 else "float32"
     return Runtime(compute_dtype="bfloat16", param_dtype=param_dtype,
                    tp_mode=tp_mode, cais_chunks=cais_chunks,
-                   tp_microbatches=tp_microbatches,
+                   tp_microbatches=tp_microbatches, tp_planner=tp_planner,
                    remat=True, sequence_parallel=True)
 
 

@@ -85,7 +85,8 @@ def _tp_context(rt: Runtime):
     return TPContext(mesh=mesh, backend=backend,
                      cais=CAISConfig(num_chunks=rt.cais_chunks,
                                      bidirectional=rt.cais_bidirectional),
-                     num_microbatches=rt.tp_microbatches)
+                     num_microbatches=rt.tp_microbatches,
+                     planner=rt.tp_planner)
 
 
 def _sp_axis(rt: Runtime, x):

@@ -1,0 +1,28 @@
+"""``repro.plan`` — the perfsim-in-the-loop schedule planner (paper §III-C's
+"compute-aware" leg): lowering bridge (:mod:`repro.plan.lower`), schedule
+search (:mod:`repro.plan.search`), measurement calibration
+(:mod:`repro.plan.calibrate`) and the per-(shape, topology) plan cache
+(:mod:`repro.plan.cache`). ``python -m repro.plan --selfcheck`` round-trips
+lower → search → cache on the canonical sublayer graphs with no devices.
+See ``docs/planner.md``.
+"""
+from repro.plan.cache import (PlanCache, default_cache, graph_signature,
+                              plan_key)
+from repro.plan.calibrate import (RATIO_TOLERANCE, CalibrationResult,
+                                  calibrate)
+from repro.plan.lower import (Lowering, fabric_from_hw, lower_graph,
+                              policy_for_backend, simulate,
+                              synthesize_shapes)
+from repro.plan.search import (CHUNK_CANDIDATES, FixedPairing,
+                               PerfsimPlanner, Plan, enumerate_pairings,
+                               microbatch_value_shapes, period_planner,
+                               search_pairing, search_period)
+
+__all__ = [
+    "CHUNK_CANDIDATES", "CalibrationResult", "FixedPairing", "Lowering",
+    "PerfsimPlanner", "Plan", "PlanCache", "RATIO_TOLERANCE", "calibrate",
+    "default_cache", "enumerate_pairings", "fabric_from_hw",
+    "graph_signature", "lower_graph", "microbatch_value_shapes",
+    "period_planner", "plan_key", "policy_for_backend", "search_pairing",
+    "search_period", "simulate", "synthesize_shapes",
+]

@@ -1,0 +1,110 @@
+"""Per-(graph signature, shapes, dtype, topology, backend) plan cache.
+
+The search in :mod:`repro.plan.search` costs many simulated lowerings per
+graph; production ``tp.sp_period`` calls re-trace the SAME (shape, topology)
+cell over and over, so plans persist as JSON under ``reports/plans/`` (one
+file per key) and repeated calls hit the precomputed plan. Keys are sha-256
+over a canonical serialization — node structure (names/ops/edges/weights),
+value/weight shapes, dtype bytes, fabric parameters, backend, and the
+candidate space — so any input that could change the argmin changes the key.
+Hit/miss counts are exposed via :attr:`PlanCache.stats` (observable, and
+pinned deterministic by ``tests/test_planner.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Dict, Optional
+
+from repro.core import dataflow as df
+
+DEFAULT_ROOT = os.environ.get("REPRO_PLAN_CACHE", "reports/plans")
+
+
+def graph_signature(g: df.Graph) -> str:
+    """Canonical structural serialization of a graph (topo order; ``fn``
+    closures excluded — the cost model never looks inside local math)."""
+    nodes = df._topo(list(g.nodes), g.outputs)
+    return json.dumps(
+        [[n.name, n.op, list(n.inputs), list(n.weights), list(n.outputs)]
+         for n in nodes] + [list(g.outputs)],
+        separators=(",", ":"))
+
+
+def plan_key(g: df.Graph, value_shapes: Dict[str, tuple],
+             weight_shapes: Dict[str, tuple], dtype_bytes: int,
+             fabric, backend: str, extra: Optional[dict] = None) -> str:
+    """The cache key: sha-256 hex digest over everything the argmin depends
+    on. ``extra`` carries search-space knobs (microbatch/chunk candidates)."""
+    payload = {
+        "graph": graph_signature(g),
+        "values": sorted((k, list(v)) for k, v in value_shapes.items()),
+        "weights": sorted((k, list(v)) for k, v in weight_shapes.items()),
+        "dtype_bytes": int(dtype_bytes),
+        "fabric": dataclasses.asdict(fabric),
+        "backend": str(backend),
+        "extra": extra or {},
+    }
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:24]
+
+
+class PlanCache:
+    """JSON-persisted plan store with observable hit/miss counters.
+
+    ``get`` returns the stored plan dict (or None); ``put`` persists one.
+    The in-memory layer makes repeated hits within a process cheap; the disk
+    layer makes them survive across processes (CI uploads the directory as
+    an artifact)."""
+
+    def __init__(self, root: str = DEFAULT_ROOT):
+        self.root = root
+        self.hits = 0
+        self.misses = 0
+        self._mem: Dict[str, dict] = {}
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, f"{key}.json")
+
+    def get(self, key: str) -> Optional[dict]:
+        if key in self._mem:
+            self.hits += 1
+            return self._mem[key]
+        path = self._path(key)
+        if os.path.exists(path):
+            try:
+                with open(path) as fh:
+                    plan = json.load(fh)
+            except (OSError, json.JSONDecodeError):
+                self.misses += 1
+                return None
+            self._mem[key] = plan
+            self.hits += 1
+            return plan
+        self.misses += 1
+        return None
+
+    def put(self, key: str, plan: dict) -> None:
+        self._mem[key] = plan
+        os.makedirs(self.root, exist_ok=True)
+        tmp = self._path(key) + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(plan, fh, indent=1, sort_keys=True)
+        os.replace(tmp, self._path(key))
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses}
+
+
+_DEFAULT: Optional[PlanCache] = None
+
+
+def default_cache() -> PlanCache:
+    """The process-wide cache the ``tp.sp_period`` planner path uses."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = PlanCache()
+    return _DEFAULT

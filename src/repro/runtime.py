@@ -33,6 +33,11 @@ class Runtime:
     # MoE periods — their aux loss is a per-batch statistic that splitting
     # changes, so that trade-off needs an explicit integer opt-in
     tp_microbatches: Union[int, str] = 1
+    # pass-3 schedule planner for the period-graph optimizer: "greedy"
+    # (deterministic nearest-independent-first pairing + α-β heuristics,
+    # the default) or "perfsim" (repro.plan: simulated-makespan argmin over
+    # pairings/chunks/microbatch splits, memoized under reports/plans/)
+    tp_planner: str = "greedy"
     # memory
     remat: bool = True                  # activation checkpointing per period
     loss_chunk: int = 512               # CE computed in seq chunks (big vocabs)

@@ -378,6 +378,38 @@ def main():
     check("period_split.runtime_knob",
           float(jnp.abs(outs_rt["split"] - outs_rt["unsplit"]).max()), 1e-6)
 
+    # ---------------- perfsim planner vs greedy (repro.plan) --------------
+    # tp_planner="perfsim" routes pass 3 + the microbatch choice through the
+    # simulated-makespan search (plan cache pointed at a tempdir here); the
+    # schedule may differ but the math may not: ≤1e-6 parity vs the greedy
+    # planner on the 4-way ring, 2-block split period, per backend
+    # (ISSUE 6 acceptance).
+    import tempfile as _tf
+
+    import repro.plan as plan_mod
+    from repro.plan import cache as plan_cache
+    _saved_cache = plan_cache._DEFAULT
+    plan_cache._DEFAULT = plan_mod.PlanCache(root=_tf.mkdtemp())
+    try:
+        ps_pl = [tr_mod.init_block(jax.random.key(60 + j), "attn", cfg_blk,
+                                   jnp.float32) for j in range(2)]
+        for mode in ("barrier", "cais"):
+            outs_pl = {}
+            for planner in ("greedy", "perfsim"):
+                tpc4p = tp_mod.TPContext(mesh=mesh4, backend=mode,
+                                         cais=cais4, planner=planner)
+                outs_pl[planner], _ = tp_mod.sp_period(
+                    tpc4p, x4, ps_pl, cfg_blk, ("attn", "attn"),
+                    num_microbatches=2)
+            check(f"planner.perfsim_vs_greedy.{mode}",
+                  float(jnp.abs(outs_pl["perfsim"]
+                                - outs_pl["greedy"]).max()), 1e-6)
+        st_pl = plan_cache._DEFAULT.stats
+        check("planner.cache_observable",
+              0.0 if st_pl["misses"] >= 1 else 1.0)
+    finally:
+        plan_cache._DEFAULT = _saved_cache
+
     # ---------------- decode-path TP (S=1: no sequence sharding) ----------
     # S=1 can't shard the sequence over the ring, but row/col-sharded GEMMs
     # don't need it: block_forward must route dense blocks through the

@@ -46,6 +46,53 @@ def test_plan_latency_guard():
     assert p.num_chunks <= 4
 
 
+def test_plan_max_chunks_cap_and_over_cap_signal():
+    # a payload whose latency bound allows >64 chunks but whose staging
+    # budget does not demand them: the cap clamps, no over_cap flag
+    p = coord.plan(1e9, ring=8, staging_budget=1024**3)
+    assert p.num_chunks == 64
+    assert not p.over_cap
+    # when the staging budget itself forces >max_chunks the budget wins
+    # (hard resource) and the plan says so instead of silently exceeding
+    p2 = coord.plan(1e10, ring=2, staging_budget=4 * 1024**2)
+    assert p2.num_chunks > 64
+    assert p2.over_cap
+    # a custom cap behaves the same way
+    p3 = coord.plan(1e9, ring=8, staging_budget=1024**3, max_chunks=16)
+    assert p3.num_chunks == 16 and not p3.over_cap
+
+
+def test_plan_compute_time_prefers_coarser_chunks():
+    """With compute_time the planner stops adding chunks once wire time no
+    longer hides under compute: scarce compute → coarser chunking, while
+    abundant compute keeps the latency-bound chunking."""
+    payload, ring = 1e9, 8
+    free = coord.plan(payload, ring, staging_budget=1024**3)
+    tight = coord.plan(payload, ring, staging_budget=1024**3,
+                       compute_time=1e-4)
+    loose = coord.plan(payload, ring, staging_budget=1024**3,
+                       compute_time=10.0)
+    assert tight.num_chunks <= free.num_chunks
+    assert tight.num_chunks < loose.num_chunks
+    assert loose.num_chunks == free.num_chunks
+    # the staging floor still wins over the compute fit
+    floor = coord.plan(1e10, ring=2, staging_budget=4 * 1024**2,
+                       compute_time=1e-6)
+    assert floor.staging_bytes <= 4 * 1024**2
+
+
+def test_plan_microbatches_injectable_hw():
+    """Tiny payloads don't split under V5E's hop latency (per-chain chunks
+    would hit the latency floor), but on a scaled-down fabric — the same
+    payload:latency ratio a real payload sees — the split engages (>1)."""
+    import dataclasses as _dc
+
+    batch, payload, ring = 8, 256 * 1024, 8
+    assert coord.plan_microbatches(batch, payload, ring) == 1
+    tiny_hw = _dc.replace(V5E, hop_latency=V5E.hop_latency / 1e4)
+    assert coord.plan_microbatches(batch, payload, ring, hw=tiny_hw) > 1
+
+
 # ---------------------------------------------------------------------------
 # dataflow (reference semantics, single device)
 # ---------------------------------------------------------------------------
