@@ -7,11 +7,13 @@ shard_map, pass-2 seam fusion) against the PR-1 per-sub-layer composition
 per-block ``sp_block`` composition, and the microbatch-split period
 (``num_microbatches=2`` — two independent chains in one graph, pass-3
 ``overlap_asym`` across them) against the unsplit serialized period, and
-the perfsim-planned period (``tp_planner="perfsim"``, docs/planner.md)
-against the same split period under the greedy planner. With
-``$REPRO_BENCH_JSON`` set, every row (including the subprocess cells) is
-dumped as the JSON baseline the CI slow-suite commits as
-``BENCH_pr6.json`` — a ``meta.sublayer_env`` row records the shapes/mode
+the perfsim-planned period (``planner="perfsim"``, docs/planner.md)
+against the same split period under the greedy planner, and the
+graph-built backward (``TPConfig.graph_backward`` — the ``sp_period``
+custom VJP, docs/training.md) against plain JAX autodiff of the executed
+forward. With ``$REPRO_BENCH_JSON`` set, every row (including the
+subprocess cells) is dumped as the JSON baseline the CI slow-suite
+commits as ``BENCH_pr7.json`` — a ``meta.sublayer_env`` row records the shapes/mode
 so baselines regenerated under different settings are not silently
 compared. Measured cells run on CPU-emulated virtual devices, where
 ``collective_permute`` chains serialize (no real bidirectional links), so
@@ -103,7 +105,7 @@ def _block_child() -> None:
         emit(f"period.split_vs_unsplit.{mode}", t_split2,
              f"unsplit_us={t_period:.0f} speedup={t_period / t_split2:.2f}x")
 
-        # perfsim-planned period (tp_planner="perfsim": the pass-3 pairing
+        # perfsim-planned period (planner="perfsim": the pass-3 pairing
         # and chunking come from the simulated-makespan search, memoized in
         # the plan cache under reports/plans/ — the artifact the 8-device CI
         # job uploads) vs the same split period under the greedy planner
@@ -117,6 +119,26 @@ def _block_child() -> None:
         t_planned = time_fn(planned, x)
         emit(f"planner.perfsim_vs_greedy.{mode}", t_planned,
              f"greedy_us={t_split2:.0f} speedup={t_split2 / t_planned:.2f}x")
+
+        # graph-built backward (TPConfig.graph_backward — sp_period's custom
+        # VJP lowers the backward as a dataflow graph merged with the
+        # forward, docs/training.md) vs JAX autodiff of the executed
+        # forward graph, on a grad-of-sum-of-squares train-step proxy
+        import dataclasses as _dc
+
+        def grad_fn(tpc_):
+            def loss(x, ps_):
+                out, _ = tp_mod.sp_period(tpc_, x, ps_, cfg,
+                                          ("attn", "attn"),
+                                          num_microbatches=2)
+                return jnp.sum(out * out)
+            return jax.jit(jax.grad(loss, argnums=(0, 1)))
+
+        t_graph = time_fn(grad_fn(tpc), x, params2)
+        t_auto = time_fn(grad_fn(_dc.replace(tpc, graph_backward=False)),
+                         x, params2)
+        emit(f"train_step.graph_vs_autodiff.{mode}", t_graph,
+             f"autodiff_us={t_auto:.0f} speedup={t_auto / t_graph:.2f}x")
 
 
 def run() -> None:

@@ -40,7 +40,7 @@ Registration API
         def ag_gemm_multi(self, x, ws, axis, cais): ...
         ...
 
-    register_backend(MyBackend())          # now Runtime(tp_mode="mine") works
+    register_backend(MyBackend())   # now TPConfig(mode="mine") works
     get_backend("mine")                    # -> the instance
     available_backends()                   # -> ["auto", "barrier", "cais", "mine"]
 
@@ -154,6 +154,17 @@ class CollectiveBackend:
         if residual is not None:
             z = z + residual
         return apply_norm(norm, {"scale": ln_scale}, z), z
+
+    # -- backward collectives (training graphs, docs/training.md) ---------
+    def grad_ag_gemm(self, d, wT, axis: str, cais: CAISConfig):
+        """Adjoint of ``gemm_rs`` (the ``bwd_ag_gemm`` IR op): all-gather the
+        seq-sharded output cotangent ``d`` (B, S_loc, F) and GEMM it with the
+        transposed local weight shard ``wT`` (F, d_loc). Returns
+        ``(d @ wT gathered, d gathered)`` — the second output feeds the
+        weight-gradient GEMM, so the gather runs once. Default: one
+        monolithic all-gather (the barrier schedule)."""
+        g = lax.all_gather(d, axis, axis=1, tiled=True)
+        return g @ wT, g
 
     # -- asymmetric dual-stream overlap ----------------------------------
     def overlap_asymmetric(self, rs_args, ag_args, axis: str,
@@ -295,6 +306,15 @@ class CAISBackend(CollectiveBackend):
         cais = self._resolve(cais, z_bytes, n)
         return super().fused_rs_ln(x, w1, ln_scale, axis, cais, norm=norm,
                                    residual=residual)
+
+    def grad_ag_gemm(self, d, wT, axis, cais):
+        # decomposed bidirectional ring gather of the cotangent, then the
+        # GEMM against the transposed shard — the grad-side mirror of the
+        # forward pull alignment
+        n = self._ring(axis, cais)
+        cais = self._resolve(cais, self._nbytes(d) * n, n)
+        g = prim.ring_all_gather(d, axis, cais)
+        return g @ wT, g
 
     def overlap_asymmetric(self, rs_args, ag_args, axis, cais):
         # no _resolve: the lockstep schedule moves one S_loc slice per hop

@@ -76,9 +76,18 @@ Fused ops (produced by ``optimize``, executed via the backend):
     a fork makes them dependency-free, so a chain is never lockstep-
     serialized against itself.
 
+``bwd_ag_gemm``
+    Backward-only: the adjoint of ``gemm_rs`` — AllGather the seq-sharded
+    output cotangent, GEMM with the transposed weight, and re-expose the
+    gathered cotangent for the weight-gradient GEMM. Emitted by
+    :func:`build_training_graph` (never by the forward builders), executed
+    via ``CollectiveBackend.grad_ag_gemm``.
+
 A worked trace of a 2-block period through every pass lives in
 ``docs/architecture.md``; ``docs/backends.md`` documents the backend methods
-each fused op dispatches to.
+each fused op dispatches to; ``docs/training.md`` documents the
+backward-graph builder (:func:`build_training_graph`) and the per-op
+adjoint table (``ADJOINTS``).
 
 The executor runs a graph either as pure math (no mesh; reference) or inside
 ``shard_map`` (explicit TP), dispatching every fused collective op through a
@@ -127,6 +136,7 @@ from repro.core.primitives import CAISConfig
 #                                                             (+ seq z)
 # fused_rs_ln          (x: feat[, res:seq])  (w1, scale)     (seq zn, seq z)
 # overlap_asym         (x_rs: feat, x_ag: seq) (w_rs, w_ag...) (seq, feat...)
+# bwd_ag_gemm          (dy: seq)             wT (d, F/n)     (feat dx, full dy)
 
 VALID_OPS = {
     "input", "gemm_col", "gemm_row", "allgather", "reduce_scatter",
@@ -134,6 +144,31 @@ VALID_OPS = {
     "route", "unroute", "a2a_ffn",
     "ag_gemm", "ag_gemm_multi", "gemm_rs", "gemm_ar", "fused_rs_ln_ag",
     "fused_rs_ln_ag_multi", "fused_rs_ln", "overlap_asym",
+    "bwd_ag_gemm",
+}
+
+# Declared adjoint vocabulary (docs/training.md): the backward-graph builder
+# (:func:`build_training_graph`) knows how to emit adjoint nodes for exactly
+# these forward ops — the op set a dense period graph contains after passes
+# 1/1b/2. Each entry maps a forward op to the IR ops its adjoint emits, so
+# the backward is itself a dataflow graph the optimizer (and the perfsim
+# planner) schedules: ``ag_gemm[_multi]`` ↔ a grad reduce-scatter
+# (``gemm_rs`` over the transposed weight), ``gemm_rs`` ↔ a grad all-gather
+# (``bwd_ag_gemm``), ``fused_rs_ln_ag[_multi]`` ↔ the fused composition of
+# both around the norm's VJP. Graphs containing any other op (MoE routing,
+# ``gemm_ar``, raw collectives) report ``supports_backward() == False`` and
+# keep JAX autodiff of the executed forward graph.
+ADJOINTS = {
+    "input": (),
+    "add": (), "residual": (),              # gradient fan-out, no new nodes
+    "layernorm": ("custom",),               # norm VJP (local math)
+    "custom": ("custom",),                  # jax.vjp of the node's fn
+    "ag_gemm": ("custom", "gemm_rs", "allgather"),
+    "ag_gemm_multi": ("custom", "gemm_rs", "allgather"),
+    "gemm_rs": ("bwd_ag_gemm", "custom"),
+    "fused_rs_ln_ag": ("custom", "gemm_rs", "bwd_ag_gemm", "allgather"),
+    "fused_rs_ln_ag_multi": ("custom", "gemm_rs", "bwd_ag_gemm",
+                             "allgather"),
 }
 
 # local-math ops whose semantics live in the node's `fn`
@@ -378,10 +413,26 @@ def asymmetric_candidates(g: Graph) -> List[Tuple[Node, Node]]:
     by the same microbatch's data — dependency-free only because of a fork —
     must never pair). Ranking: topological distance, ties broken by earliest
     topo position and then by node names — the greedy pass takes the head of
-    this list; the perfsim planner scores *alternative* orders."""
+    this list; the perfsim planner scores *alternative* orders.
+
+    On a merged fwd+bwd TRAINING graph (one with ``d.*`` cotangent-seed
+    inputs, see :func:`build_training_graph`) cross-direction pairs — a
+    backward grad reduce-scatter against a forward(-recompute) gather, the
+    T3-class overlap the paper targets — rank before same-direction pairs:
+    pairing two forward nodes of different chains serializes one chain's
+    whole backward behind the other's forward, while the cross pair is the
+    schedule that hides the grad collective behind the next chain's
+    forward. Forward-only graphs have no seeds, so their ranking (and every
+    pre-training behaviour pinned on it) is unchanged."""
     nodes = _topo(list(g.nodes), g.outputs)
     order = {n.name: i for i, n in enumerate(nodes)}
     chain = _input_ancestors(g, nodes)
+    seeds = frozenset(n.name for n in nodes
+                      if n.op == "input" and n.name.startswith(_D_PREFIX))
+
+    def is_bwd(name: str) -> bool:
+        return bool(chain[name] & seeds)
+
     cands = []
     for a in nodes:
         if a.op != "gemm_rs":
@@ -393,7 +444,8 @@ def asymmetric_candidates(g: Graph) -> List[Tuple[Node, Node]]:
                 continue
             if g.reaches(a.name, b.name) or g.reaches(b.name, a.name):
                 continue
-            key = (abs(order[a.name] - order[b.name]),
+            key = (0 if seeds and is_bwd(a.name) != is_bwd(b.name) else 1,
+                   abs(order[a.name] - order[b.name]),
                    min(order[a.name], order[b.name]), a.name, b.name)
             cands.append((key, a, b))
     cands.sort(key=lambda t: t[0])
@@ -561,7 +613,7 @@ def execute(g: Graph, values: Dict[str, jnp.ndarray],
                 for name, val in zip(n.outputs, res):
                     env[name] = val
             else:
-                env[n.name] = res
+                env[n.outputs[0]] = res
         elif n.op == "a2a_ffn":
             fn = (lambda chunk, _n=n, _ws=tuple(ws): _n.fn(chunk, *_ws))
             env[n.name] = (be.a2a_expert_ffn(ins[0], fn, axis, cais)
@@ -577,6 +629,13 @@ def execute(g: Graph, values: Dict[str, jnp.ndarray],
         elif n.op == "gemm_rs":
             env[n.name] = (be.gemm_rs(ins[0], ws[0], axis, cais)
                            if dist else ins[0] @ ws[0])
+        elif n.op == "bwd_ag_gemm":
+            # adjoint of gemm_rs: gather the seq-sharded cotangent, GEMM with
+            # the transposed weight; the gathered cotangent is re-exposed for
+            # the weight-gradient GEMM (outputs (d_x, dy_full))
+            dx_, dyf = (be.grad_ag_gemm(ins[0], ws[0], axis, cais)
+                        if dist else (ins[0] @ ws[0], ins[0]))
+            env[n.outputs[0]], env[n.outputs[1]] = dx_, dyf
         elif n.op == "gemm_ar":
             env[n.name] = (be.gemm_ar(ins[0], ws[0], axis, cais)
                            if dist else ins[0] @ ws[0])
@@ -714,3 +773,333 @@ def dual_sublayer_graph() -> Graph:
         ],
         outputs=("rsa", "gb"),
     )
+
+
+# ---------------------------------------------------------------------------
+# Backward: training graphs (declared adjoints per fused forward op)
+# ---------------------------------------------------------------------------
+#
+# build_training_graph takes a forward graph that has been through passes
+# 1/1b/2 (NOT pass 3 — overlap_asym has no adjoint; the caller runs pass 3
+# on the *merged* result so it can pair forward against backward
+# collectives) and appends adjoint nodes in reverse topological order. The
+# builder works at the fused-op level on purpose: pass 2 re-exposes every
+# activation the adjoints need (z, the normed value is recomputable from z,
+# q/k/v/o/h are plain graph values), whereas differentiating the primitive
+# graph would hang extra non-gemm consumers off every allgather and block
+# passes 1b/2 from fusing the forward at all.
+#
+# Derived weight keys: adjoints reference transposed (and, for shared
+# gathers, concatenated) forward weights as new keys ``"w^T"`` /
+# ``"wa+wb^T"``. These are *local-shard* transforms — the transpose of a
+# column shard IS that device's shard of the row-sharded transpose — so
+# :func:`derived_weights` materializes them inside shard_map from the local
+# forward shards, with no extra mesh arguments.
+
+_D_PREFIX = "d."
+_DW_PREFIX = "dw."
+
+
+def grad_input_name(value: str) -> str:
+    """Name of the ``input`` node seeding the cotangent of forward output
+    ``value`` in a training graph."""
+    return _D_PREFIX + value
+
+
+def supports_backward(g: Graph) -> bool:
+    """True iff every node's op has a declared adjoint (:data:`ADJOINTS`) —
+    the dense period-graph op set after passes 1/1b/2. MoE routing,
+    ``gemm_ar`` (ragged/decode TP) and pass-3 ``overlap_asym`` have none;
+    callers keep JAX autodiff of the executed forward graph for those."""
+    return all(n.op in ADJOINTS for n in g.nodes)
+
+
+@dataclass(frozen=True)
+class TrainingGraph:
+    """A forward graph with its graph-built backward appended.
+
+    ``graph.outputs`` = the input cotangents (one per forward ``input``
+    node that gradients reach, in forward declaration order) followed by
+    every per-use weight-gradient value. ``dweights`` groups the latter by
+    forward weight key: shared-weight chains (microbatch copies of one
+    block) each contribute one value per use, and the caller sums each
+    group (then psums replicated-weight grads over the mesh)."""
+    graph: Graph
+    grad_inputs: Tuple[str, ...]          # cotangent seeds ("d." + output)
+    dx: Dict[str, str]                    # fwd input value -> grad value
+    dweights: Dict[str, Tuple[str, ...]]  # weight key -> grad values (sum)
+
+
+def _norm_vjp(norm: str) -> Callable:
+    def vjp_fn(x, gy, scale):
+        from repro.models.layers import apply_norm
+        _, pull = jax.vjp(
+            lambda xx, ss: apply_norm(norm, {"scale": ss}, xx), x, scale)
+        return pull(gy)          # (d_x, d_scale)
+    return vjp_fn
+
+
+def _norm_fwd(norm: str) -> Callable:
+    def fwd_fn(x, scale):
+        from repro.models.layers import apply_norm
+        return apply_norm(norm, {"scale": scale}, x)
+    return fwd_fn
+
+
+def _fn_vjp(fn: Callable, k_in: int, k_w: int,
+            mask: Tuple[bool, ...]) -> Callable:
+    """Adjoint of a ``custom`` node's fn. Called as
+    ``vjp(*fwd_inputs, *present_cotangents, *fwd_weights)`` (the executor's
+    ``fn(*ins, *ws)`` convention); absent cotangents (outputs no gradient
+    reaches) are zero-filled against the recomputed primals."""
+    def vjp_fn(*args):
+        prim = args[:k_in]
+        cots = args[k_in:len(args) - k_w] if k_w else args[k_in:]
+        ws = args[len(args) - k_w:] if k_w else ()
+        outs, pull = jax.vjp(fn, *prim, *ws)
+        it = iter(cots)
+        if len(mask) == 1:
+            cot = next(it)
+        else:
+            cot = tuple(next(it) if m else jnp.zeros_like(o)
+                        for m, o in zip(mask, outs))
+        grads = pull(cot)        # cotangents for (inputs..., weights...)
+        return grads if len(grads) > 1 else grads[0]
+    return vjp_fn
+
+
+def _concat_last(*gs):
+    return jnp.concatenate(gs, axis=-1)
+
+
+def _dw(act, gout):
+    """Per-use weight gradient: contract activation (B, S, in) against the
+    output cotangent (B, S, out) over batch×seq → (in, out)."""
+    return jnp.einsum("bsi,bsj->ij", act, gout)
+
+
+def build_training_graph(g: Graph, norm: str = "rmsnorm") -> TrainingGraph:
+    """Append the graph-built backward to forward graph ``g`` (which must be
+    post-pass-1/1b/2 and pre-pass-3; see the section comment above).
+
+    Every forward output gets a cotangent seed ``input`` node
+    (:func:`grad_input_name`); adjoints are emitted per the declared
+    :data:`ADJOINTS` vocabulary in reverse topo order, accumulating fan-out
+    gradients through ``add`` nodes. The result is ONE graph containing
+    both directions — run :func:`optimize` on it so pass 3 can pair a
+    backward grad reduce-scatter against an independent chain's forward
+    gather (the fwd/bwd cross-chain ``overlap_asym`` the paper targets)."""
+    bad = sorted({n.op for n in g.nodes if n.op not in ADJOINTS})
+    if bad:
+        raise GraphError(
+            f"no declared adjoint for op {bad[0]!r}; gate on "
+            f"supports_backward() and fall back to JAX autodiff")
+    fwd = _topo(list(g.nodes), g.outputs)
+    nodes: List[Node] = list(fwd)
+    contrib: Dict[str, List[str]] = {}
+    dweights: Dict[str, List[str]] = {}
+    grad_inputs = tuple(grad_input_name(o) for o in g.outputs)
+    for o, gi in zip(g.outputs, grad_inputs):
+        nodes.append(Node(gi, "input"))
+        contrib.setdefault(o, []).append(gi)
+
+    def finalize(v: str) -> Optional[str]:
+        # sum the contributions to d(v); None if no gradient reaches v
+        parts = contrib.get(v)
+        if not parts:
+            return None
+        acc = parts[0]
+        for i, p in enumerate(parts[1:]):
+            nm = f"dsum{i}.{v}"
+            nodes.append(Node(nm, "add", (acc, p)))
+            acc = nm
+        return acc
+
+    def take(v: str, grad: str) -> None:
+        contrib.setdefault(v, []).append(grad)
+
+    def add_dw(w: str, grad: str) -> None:
+        dweights.setdefault(w, []).append(grad)
+
+    def grad_rs(n: Node, gys: List[str], an: str, xn: str) -> str:
+        # shared d(gathered-input) leg of ag_gemm[_multi] and the fused ops:
+        # concat the per-weight cotangents and reduce-scatter them through
+        # the transposed (concatenated) weight — the grad reduce-scatter
+        if len(gys) > 1:
+            cat = f"dcat.{n.name}"
+            nodes.append(Node(f"adj.cat.{n.name}", "custom", tuple(gys),
+                              outputs=(cat,), fn=_concat_last))
+        else:
+            cat = gys[0]
+        out = f"d.{xn}@{an}"
+        nodes.append(Node(out, "gemm_rs", (cat,),
+                          ("+".join(n.weights[-len(gys):]) + "^T",)))
+        return out
+
+    dx: Dict[str, str] = {}
+    for n in reversed(fwd):
+        an = f"adj.{n.name}"
+        if n.op == "input":
+            dxv = finalize(n.name)
+            if dxv is not None:
+                dx[n.name] = dxv
+        elif n.op in ("add", "residual"):
+            gy = finalize(n.name)
+            if gy is not None:
+                for v in n.inputs:
+                    take(v, gy)
+        elif n.op == "layernorm":
+            gy = finalize(n.name)
+            if gy is None:
+                continue
+            xin, scale = n.inputs[0], n.weights[0]
+            nodes.append(Node(
+                an, "custom", (xin, gy), (scale,),
+                outputs=(f"d.{xin}@{an}", f"{_DW_PREFIX}{an}.{scale}"),
+                fn=_norm_vjp(norm)))
+            take(xin, f"d.{xin}@{an}")
+            add_dw(scale, f"{_DW_PREFIX}{an}.{scale}")
+        elif n.op == "custom":
+            gys = [finalize(v) for v in n.outputs]
+            if all(q is None for q in gys):
+                continue
+            have = tuple(q for q in gys if q is not None)
+            mask = tuple(q is not None for q in gys)
+            outs = (tuple(f"d.{v}@{an}" for v in n.inputs)
+                    + tuple(f"{_DW_PREFIX}{an}.{w}" for w in n.weights))
+            nodes.append(Node(
+                an, "custom", n.inputs + have, n.weights, outputs=outs,
+                fn=_fn_vjp(n.fn, len(n.inputs), len(n.weights), mask)))
+            for v in n.inputs:
+                take(v, f"d.{v}@{an}")
+            for w in n.weights:
+                add_dw(w, f"{_DW_PREFIX}{an}.{w}")
+        elif n.op in ("ag_gemm", "ag_gemm_multi"):
+            gys = [finalize(v) for v in n.outputs]
+            if all(q is None for q in gys):
+                continue
+            if any(q is None for q in gys):
+                raise GraphError(
+                    f"partial cotangents for shared gather {n.name!r}: "
+                    f"every output of an ag_gemm_multi must be consumed")
+            xn = n.inputs[0]
+            take(xn, grad_rs(n, gys, an, xn))
+            # weight grads re-gather the seq-sharded input (Megatron-style
+            # recompute of the gathered activation — a raw IR allgather so
+            # the planner sees and costs it)
+            xg = f"xg.{n.name}"
+            nodes.append(Node(xg, "allgather", (xn,)))
+            for w, gy in zip(n.weights, gys):
+                nodes.append(Node(f"adj.dw.{n.name}.{w}", "custom",
+                                  (xg, gy),
+                                  outputs=(f"{_DW_PREFIX}{an}.{w}",),
+                                  fn=_dw))
+                add_dw(w, f"{_DW_PREFIX}{an}.{w}")
+        elif n.op == "gemm_rs":
+            gy = finalize(n.name)
+            if gy is None:
+                continue
+            hin, w1 = n.inputs[0], n.weights[0]
+            dh, dyf = f"d.{hin}@{an}", f"dfull.{n.name}"
+            nodes.append(Node(an, "bwd_ag_gemm", (gy,), (w1 + "^T",),
+                              outputs=(dh, dyf)))
+            take(hin, dh)
+            nodes.append(Node(f"adj.dw.{n.name}.{w1}", "custom",
+                              (hin, dyf),
+                              outputs=(f"{_DW_PREFIX}{an}.{w1}",), fn=_dw))
+            add_dw(w1, f"{_DW_PREFIX}{an}.{w1}")
+        elif n.op in ("fused_rs_ln_ag", "fused_rs_ln_ag_multi"):
+            gs, z = n.outputs[:-1], n.outputs[-1]
+            gys = [finalize(v) for v in gs]
+            dz_ext = finalize(z)
+            if all(q is None for q in gys) and dz_ext is None:
+                continue
+            if any(q is None for q in gys):
+                raise GraphError(
+                    f"partial cotangents for fused seam {n.name!r}: every "
+                    f"gather output must be consumed")
+            hin = n.inputs[0]
+            res = n.inputs[1] if len(n.inputs) > 1 else None
+            w1, scale = n.weights[0], n.weights[1]
+            # d(zn): the grad reduce-scatter through the w2 leg
+            dzn = grad_rs(n, gys, an, f"zn.{n.name}")
+            # norm VJP: d(z) from d(zn) (needs z, re-exposed by pass 2)
+            dz_n, dscale = f"dznorm.{n.name}", f"{_DW_PREFIX}{an}.{scale}"
+            nodes.append(Node(f"adj.ln.{n.name}", "custom", (z, dzn),
+                              (scale,), outputs=(dz_n, dscale),
+                              fn=_norm_vjp(norm)))
+            add_dw(scale, dscale)
+            if dz_ext is not None:
+                dz = f"dz.{n.name}"
+                nodes.append(Node(dz, "add", (dz_n, dz_ext)))
+            else:
+                dz = dz_n
+            if res is not None:
+                take(res, dz)
+            # grad all-gather back through the RS leg
+            dh, dyf = f"d.{hin}@{an}", f"dfull.{n.name}"
+            nodes.append(Node(an, "bwd_ag_gemm", (dz,), (w1 + "^T",),
+                              outputs=(dh, dyf)))
+            take(hin, dh)
+            nodes.append(Node(f"adj.dw.{n.name}.{w1}", "custom",
+                              (hin, dyf),
+                              outputs=(f"{_DW_PREFIX}{an}.{w1}",), fn=_dw))
+            add_dw(w1, f"{_DW_PREFIX}{an}.{w1}")
+            # w2 grads: recompute zn from the re-exposed z, re-gather it
+            znr, zg = f"znr.{n.name}", f"zg.{n.name}"
+            nodes.append(Node(znr, "custom", (z,), (scale,),
+                              fn=_norm_fwd(norm)))
+            nodes.append(Node(zg, "allgather", (znr,)))
+            for w, gy in zip(n.weights[2:], gys):
+                nodes.append(Node(f"adj.dw.{n.name}.{w}", "custom",
+                                  (zg, gy),
+                                  outputs=(f"{_DW_PREFIX}{an}.{w}",),
+                                  fn=_dw))
+                add_dw(w, f"{_DW_PREFIX}{an}.{w}")
+        else:  # pragma: no cover — ADJOINTS gate above is exhaustive
+            raise GraphError(f"unhandled adjoint for op {n.op!r}")
+
+    fwd_inputs = [n.name for n in fwd if n.op == "input"]
+    dx_outs = tuple(dx[v] for v in fwd_inputs if v in dx)
+    dw_outs = tuple(v for vals in dweights.values() for v in vals)
+    tg = Graph(nodes, dx_outs + dw_outs).validate()
+    return TrainingGraph(tg, grad_inputs, dx,
+                         {k: tuple(v) for k, v in dweights.items()})
+
+
+def derived_weight_keys(g: Graph) -> List[str]:
+    """The transposed/concatenated weight keys (suffix ``"^T"``) a training
+    graph references beyond the forward weights, in first-use order."""
+    seen, out = set(), []
+    for n in g.nodes:
+        for w in n.weights:
+            if w.endswith("^T") and w not in seen:
+                seen.add(w)
+                out.append(w)
+    return out
+
+
+def derived_weights(g: Graph, weights: Dict) -> Dict:
+    """Extend ``weights`` with the derived keys of ``g``: ``"w^T"`` is the
+    (local-shard) transpose of ``weights["w"]``; ``"a+b^T"`` concatenates
+    the named shards along their last axis first (the shared-gather layout)
+    then transposes. Local transforms only — valid inside shard_map."""
+    out = dict(weights)
+    for key in derived_weight_keys(g):
+        parts = key[:-2].split("+")
+        w = (out[parts[0]] if len(parts) == 1 else
+             jnp.concatenate([out[p] for p in parts], axis=-1))
+        out[key] = w.T if hasattr(w, "T") else w
+    return out
+
+
+def derived_weight_shapes(g: Graph, shapes: Dict) -> Dict:
+    """Shape-level twin of :func:`derived_weights` for the planner: maps the
+    derived keys to (out, in)-transposed / concat-then-transposed shapes."""
+    out = dict(shapes)
+    for key in derived_weight_keys(g):
+        parts = key[:-2].split("+")
+        d = out[parts[0]][0]
+        f = sum(out[p][-1] for p in parts)
+        out[key] = (f, d)
+    return out

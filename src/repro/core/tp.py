@@ -34,8 +34,9 @@ plan_microbatches`. See ``docs/architecture.md`` for the full layer map.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
-from typing import Callable, Optional, Sequence, Union
+from typing import TYPE_CHECKING, Callable, Dict, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -49,8 +50,14 @@ from repro.core import dataflow as df
 from repro.core.backends import CollectiveBackend, get_backend
 from repro.core.primitives import CAISConfig
 
+if TYPE_CHECKING:                                # pragma: no cover
+    from repro.runtime import TPConfig
+
 BATCH = sharding.BATCH_AXES
 MODEL = sharding.MODEL_AXIS
+# the data-parallel mesh axes a weight gradient must be psummed over (the
+# batch is sharded across them; weights are replicated there)
+_BATCH_AXES = BATCH if isinstance(BATCH, tuple) else (BATCH,)
 
 
 @dataclass(frozen=True)
@@ -68,7 +75,9 @@ class TPContext:
     over pairings/chunks/microbatch splits, memoized in the plan cache).
     ``hw`` is the α-β target-hardware model the microbatch planner and the
     perfsim fabric read — injectable so tests can pin behaviour with a
-    scaled-down fabric."""
+    scaled-down fabric. ``graph_backward`` routes dense-period training
+    gradients through the graph-built custom VJP (``docs/training.md``)
+    instead of JAX autodiff of the executed forward."""
 
     mesh: Mesh
     backend: Union[str, CollectiveBackend] = "cais"
@@ -76,9 +85,25 @@ class TPContext:
     num_microbatches: Union[int, str] = 1
     planner: str = "greedy"
     hw: "coordination.HWSpec" = coordination.V5E
+    graph_backward: bool = True
 
     def __post_init__(self):
         object.__setattr__(self, "backend", get_backend(self.backend))
+
+    @classmethod
+    def from_config(cls, tp: "TPConfig", mesh: Mesh,
+                    hw: "coordination.HWSpec" = coordination.V5E
+                    ) -> "TPContext":
+        """THE construction path from the runtime-level
+        :class:`repro.runtime.TPConfig` to an execution context. Every model
+        entry point (``models/transformer``, ``serve/engine``, launchers)
+        routes through here so a ``Runtime.tp`` knob can never silently
+        diverge from what the mesh actually executes."""
+        return cls(mesh=mesh, backend=tp.mode,
+                   cais=CAISConfig(num_chunks=tp.chunks,
+                                   bidirectional=tp.bidirectional),
+                   num_microbatches=tp.microbatches, planner=tp.planner,
+                   hw=hw, graph_backward=tp.graph_backward)
 
     @property
     def mode(self) -> str:
@@ -101,6 +126,39 @@ def _smap(tpc: TPContext, fn, in_specs, out_specs):
                    if isinstance(out_specs, list)
                    else _specs(tpc.mesh, *out_specs)),
         check_vma=False)
+
+
+@dataclass(frozen=True)
+class SPOptions:
+    """Shared keyword-only options for the ``sp_*`` entry points
+    (``sp_ffn`` / ``sp_attention`` / ``sp_block`` / ``sp_period``), so new
+    execution knobs land in one place instead of being re-threaded through
+    every signature. Pass as ``opts=SPOptions(...)``; the individual fields
+    are also still accepted as direct keywords (folded into the options
+    object) so existing call sites keep working.
+
+    ``prefix_len`` marks leading prefix-LM (bidirectional) positions;
+    ``window`` is the SWA window for :func:`sp_attention` (period entry
+    points take it from the block kind); ``seq_sharded=False`` selects the
+    decode/ragged replicated-activation allreduce schedule;
+    ``num_microbatches`` overrides the :class:`TPContext` knob for one call."""
+
+    prefix_len: int = 0
+    norm_kind: str = "rmsnorm"
+    seq_sharded: bool = True
+    num_microbatches: Union[int, str, None] = None
+    window: int = 0
+
+
+def _sp_opts(opts: Optional[SPOptions], legacy: dict) -> SPOptions:
+    """Fold direct-keyword options into an :class:`SPOptions`."""
+    opts = opts if opts is not None else SPOptions()
+    if legacy:
+        bad = sorted(set(legacy) - set(SPOptions.__dataclass_fields__))
+        if bad:
+            raise TypeError(f"unknown sp_* option {bad[0]!r}")
+        opts = dataclasses.replace(opts, **legacy)
+    return opts
 
 
 # ---------------------------------------------------------------------------
@@ -296,9 +354,12 @@ def moe_block_graph(core_fn: Callable, route_fn: Callable,
 
 
 def sp_ffn(tpc: TPContext, x, norm_scale, w_up, w_gate, w_down,
-           act: str, norm_kind: str = "rmsnorm"):
+           act: str, *, opts: Optional[SPOptions] = None, **kw):
     """x: (B, S, d) logically sequence-sharded. Returns FFN(LN(x)) with the
-    residual handled by the caller. ``w_gate`` may be None."""
+    residual handled by the caller. ``w_gate`` may be None. Options (e.g.
+    ``norm_kind``) via ``opts`` / :class:`SPOptions` keywords."""
+    o = _sp_opts(opts, kw)
+    norm_kind = o.norm_kind
     has_gate = w_gate is not None
     graph = df.optimize(ffn_sublayer_graph(has_gate, act))
     wnames = ("scale", "w_up") + (("w_gate",) if has_gate else ()) + \
@@ -359,18 +420,22 @@ def _attention_core_fn(cfg, tp: int, window: int = 0, prefix_len: int = 0
     return core
 
 
-def sp_attention(tpc: TPContext, x, norm_scale, wq, wk, wv, wo, cfg,
-                 window: int = 0, prefix_len: int = 0,
-                 norm_kind: str = "rmsnorm"):
+def sp_attention(tpc: TPContext, x, norm_scale, wq, wk, wv, wo, cfg, *,
+                 opts: Optional[SPOptions] = None, **kw):
     """Full Megatron-SP attention block over the collective backend.
     x: (B, S, d) sequence-sharded; Q heads shard over `model`. When
     num_kv_heads < tp (GQA/MQA), K/V weights replicate and every device
     computes the full K/V from the same gathered activation chunks — the
     standard Megatron KV-replication, and the gather is still shared with
-    the Q projection (one ring circulation feeds all three)."""
+    the Q projection (one ring circulation feeds all three). Options
+    (``window``, ``prefix_len``, ``norm_kind``) via ``opts`` /
+    :class:`SPOptions` keywords."""
+    o = _sp_opts(opts, kw)
+    norm_kind = o.norm_kind
     tp = tpc.tp
     kv_sharded = cfg.num_kv_heads % tp == 0
-    core = _attention_core_fn(cfg, tp, window=window, prefix_len=prefix_len)
+    core = _attention_core_fn(cfg, tp, window=o.window,
+                              prefix_len=o.prefix_len)
 
     graph = df.optimize(attention_sublayer_graph(core))
 
@@ -678,8 +743,24 @@ def resolve_microbatches(tpc: TPContext, x,
     return mb
 
 
+def _core_comp_hints(cfg, kinds: Sequence[str], batch: int, seq: int
+                     ) -> Dict[str, float]:
+    """Planner ``comp_hints`` for a single-chain period graph: the attention
+    cores (``b{i}.o`` custom nodes) are the only op class whose cost the
+    lowering cannot read off GEMM weight shapes, so their FLOPs come from
+    :func:`repro.models.counting.attention_core_flops`. Keys are base-graph
+    node names (per-replica ``batch``, like the planner's value shapes);
+    :func:`repro.plan.search.microbatch_comp_hints` re-prefixes and
+    re-scales them per microbatch chain."""
+    from repro.models.counting import attention_core_flops
+
+    flops = attention_core_flops(cfg, batch, seq)
+    return {f"b{i}.o": flops for i in range(len(kinds))}
+
+
 def _plan_period(tpc: TPContext, base: df.Graph, weights, x,
-                 requested: Union[int, str, None], moe: bool):
+                 requested: Union[int, str, None], moe: bool,
+                 comp_hints: Optional[Dict[str, float]] = None):
     """The (num_microbatches, pass-3 planner) decision for one period graph
     under ``tpc.planner``.
 
@@ -708,14 +789,44 @@ def _plan_period(tpc: TPContext, base: df.Graph, weights, x,
         weight_shapes={k: tuple(v.shape) for k, v in weights.items()},
         dtype_bytes=np.dtype(x.dtype).itemsize, tp=tpc.tp,
         backend=tpc.mode, mb_candidates=cands, hw=tpc.hw,
-        cache=plan_mod.default_cache())
+        cache=plan_mod.default_cache(), comp_hints=comp_hints)
     return plan.num_microbatches, pairer
 
 
-def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str],
-              prefix_len: int = 0, norm_kind: str = "rmsnorm",
-              seq_sharded: bool = True,
-              num_microbatches: Union[int, str, None] = None):
+def _bwd_planner(tpc: TPContext, tg: "df.TrainingGraph", weights, x,
+                 mb: int, hints: Optional[Dict[str, float]]):
+    """Pass-3 planner for the merged fwd+bwd training graph. ``"greedy"``
+    keeps the deterministic nearest-pair policy (None). ``"perfsim"`` builds
+    a fresh :class:`repro.plan.PerfsimPlanner` over the training graph's
+    value shapes (per-chain ``x`` AND cotangent seeds) and the weight table
+    extended with the derived transposed keys, with backward attention-core
+    adjoints hinted at 2× forward FLOPs."""
+    if tpc.planner != "perfsim":
+        return None
+    from repro import plan as plan_mod
+
+    b_loc = max(int(x.shape[0]) // max(sharding.dp_size(tpc.mesh), 1), 1)
+    per = (max(b_loc // mb, 1), int(x.shape[1]), int(x.shape[2]))
+    chains = ["x"] if mb == 1 else [f"mb{i}.x" for i in range(mb)]
+    vshapes = {c: per for c in chains}
+    vshapes.update({gi: per for gi in tg.grad_inputs})
+    wshapes = {k: tuple(v.shape) for k, v in weights.items()}
+    wshapes.update(df.derived_weight_shapes(tg.graph, wshapes))
+    bh = {}
+    for k, f in (hints or {}).items():
+        for pfx in ([""] if mb == 1 else [f"mb{i}." for i in range(mb)]):
+            bh[pfx + k] = f / mb
+            bh["adj." + pfx + k] = 2.0 * f / mb
+    return plan_mod.PerfsimPlanner(
+        value_shapes=vshapes, weight_shapes=wshapes,
+        dtype_bytes=np.dtype(x.dtype).itemsize,
+        fabric=plan_mod.fabric_from_hw(tpc.hw, max(tpc.tp, 2)),
+        backend=tpc.mode, num_microbatches=mb,
+        cache=plan_mod.default_cache(), comp_hints=bh or None)
+
+
+def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str], *,
+              opts: Optional[SPOptions] = None, **kw):
     """A whole ``layer_pattern`` period — every block in ``kinds`` with its
     params from ``params_seq`` — built as ONE dataflow graph, optimized, and
     executed in ONE ``shard_map``. This is the unit the paper's graph-level
@@ -724,7 +835,8 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str],
     QKV shared gather, and the MoE rs → residual → ln → route variant) that
     no per-block graph can see, and pass 3's deterministic
     nearest-pair policy co-schedules whatever independent RS/AG pairs the
-    merged graph exposes.
+    merged graph exposes. Options via ``opts`` / :class:`SPOptions`
+    keywords.
 
     ``num_microbatches`` (default: the :class:`TPContext` knob; ``"auto"``
     → :func:`resolve_microbatches`) splits the batch axis into that many
@@ -741,16 +853,34 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str],
     ``"auto"`` therefore never splits an MoE period — an explicit integer
     is the opt-in that accepts the changed aux term.
 
+    When ``tpc.graph_backward`` is set (the default) and the period is a
+    dense sequence-sharded one whose ops all declare adjoints
+    (:func:`repro.core.dataflow.supports_backward`), execution is wrapped in
+    ``jax.custom_vjp``: the backward is BUILT as a dataflow graph too
+    (:func:`repro.core.dataflow.build_training_graph` over the pass-2-fused
+    forward), optimized by the same pass-3 planner, and executed in one
+    backward ``shard_map`` — so with ``num_microbatches ≥ 2`` pass 3 pairs
+    one chain's backward grad reduce-scatter against another chain's
+    forward-recompute gather (``overlap_asym`` spanning fwd and bwd), the
+    overlap class the paper wins its training speedup from. MoE and
+    non-seq-sharded periods fall back to JAX autodiff of the executed
+    forward. See ``docs/training.md``.
+
     x: (B, S, d), sequence-sharded when ``seq_sharded`` (the training path)
     or replicated when not (the decode/ragged-S allreduce path, dense blocks
     only). Returns (period output, summed aux loss)."""
+    o = _sp_opts(opts, kw)
+    norm_kind = o.norm_kind
     dtype = x.dtype
     base, weights, specs, aux_vals = _period_graph(
-        tpc, params_seq, cfg, kinds, prefix_len=prefix_len, dtype=dtype,
-        seq_sharded=seq_sharded)
-    mb, planner = _plan_period(tpc, base, weights, x, num_microbatches,
-                               moe=bool(aux_vals))
-    graph = df.optimize(microbatch_period_graph(base, mb), planner=planner)
+        tpc, params_seq, cfg, kinds, prefix_len=o.prefix_len, dtype=dtype,
+        seq_sharded=o.seq_sharded)
+    b_loc = max(int(x.shape[0]) // max(sharding.dp_size(tpc.mesh), 1), 1)
+    hints = _core_comp_hints(cfg, kinds, b_loc, int(x.shape[1]))
+    mb, planner = _plan_period(tpc, base, weights, x, o.num_microbatches,
+                               moe=bool(aux_vals), comp_hints=hints)
+    merged = microbatch_period_graph(base, mb)
+    graph = df.optimize(merged, planner=planner)
     names = list(weights)
     n_aux = len(aux_vals)
 
@@ -772,34 +902,99 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str],
                       for j in range(n_aux))
         return (out,) + auxes
 
-    x_spec = (BATCH, MODEL, None) if seq_sharded else (BATCH, None, None)
+    x_spec = (BATCH, MODEL, None) if o.seq_sharded else (BATCH, None, None)
     in_specs = [x_spec] + [specs[k] for k in names]
     out_specs = [x_spec] + [(MODEL,)] * n_aux
-    res = _smap(tpc, local, in_specs, out_specs)(x, *weights.values())
-    aux = jnp.float32(0.0)
-    for a in res[1:]:
-        aux = aux + jnp.mean(a)
-    return res[0], aux
+    fwd_call = _smap(tpc, local, in_specs, out_specs)
+
+    use_graph_bwd = (tpc.graph_backward and o.seq_sharded and not aux_vals
+                     and getattr(tpc.backend, "explicit", True))
+    if use_graph_bwd:
+        # the backward is declared against the pass-2-fused forward (it
+        # re-exposes every activation the adjoints need); pass 3 then runs
+        # on the MERGED fwd+bwd graph so pairing can span both directions
+        g2 = df.fuse_sublayer_chain(df.fuse_shared_gather(
+            df.fuse_compute_aware(merged)))
+        use_graph_bwd = df.supports_backward(g2)
+    if not use_graph_bwd:
+        res = fwd_call(x, *weights.values())
+        aux = jnp.float32(0.0)
+        for a in res[1:]:
+            aux = aux + jnp.mean(a)
+        return res[0], aux
+
+    tg = df.build_training_graph(g2, norm=norm_kind)
+    bwd_graph = df.optimize(tg.graph, planner=_bwd_planner(
+        tpc, tg, weights, x, mb, hints))
+    chains = ["x"] if mb == 1 else [f"mb{i}.x" for i in range(mb)]
+    # weight grads leave the shard_map through specs that omit the batch
+    # axes (and MODEL for replicated weights), so the partial sums must be
+    # completed inside
+    batch_axes = tuple(a for a in _BATCH_AXES
+                       if a in tpc.mesh.axis_names)
+    model_in_mesh = MODEL in tpc.mesh.axis_names
+
+    def local_bwd(x, gy, *ws):
+        wmap = df.derived_weights(bwd_graph, dict(zip(names, ws)))
+        vals = {}
+        xs = jnp.split(x, mb, axis=0) if mb > 1 else [x]
+        gys = jnp.split(gy, mb, axis=0) if mb > 1 else [gy]
+        vals.update(zip(chains, xs))
+        vals.update(zip(tg.grad_inputs, gys))
+        res = df.execute(bwd_graph, vals, wmap, axis=MODEL, cais=tpc.cais,
+                         norm=norm_kind, backend=tpc.backend)
+        got = dict(zip(bwd_graph.outputs, res))
+        dxs = [got[tg.dx[c]] for c in chains]
+        dx = jnp.concatenate(dxs, axis=0) if mb > 1 else dxs[0]
+        dws = []
+        for k, w in zip(names, ws):
+            parts = [got[v] for v in tg.dweights.get(k, ())]
+            dw = parts[0] if parts else jnp.zeros_like(w)
+            for p_ in parts[1:]:
+                dw = dw + p_
+            if batch_axes:
+                dw = jax.lax.psum(dw, batch_axes)
+            if model_in_mesh and MODEL not in specs[k]:
+                dw = jax.lax.psum(dw, MODEL)
+            dws.append(dw.astype(w.dtype))
+        return (dx.astype(x.dtype),) + tuple(dws)
+
+    bwd_call = _smap(tpc, local_bwd,
+                     [x_spec, x_spec] + [specs[k] for k in names],
+                     [x_spec] + [specs[k] for k in names])
+
+    @jax.custom_vjp
+    def period(x, *ws):
+        return fwd_call(x, *ws)[0]
+
+    def period_fwd(x, *ws):
+        return fwd_call(x, *ws)[0], (x, ws)
+
+    def period_bwd(saved, gy):
+        xr, ws = saved
+        out = bwd_call(xr, gy, *ws)
+        return (out[0],) + tuple(out[1:])
+
+    period.defvjp(period_fwd, period_bwd)
+    return period(x, *tuple(weights.values())), jnp.float32(0.0)
 
 
-def sp_block(tpc: TPContext, x, params, cfg, kind: str = "attn",
-             prefix_len: int = 0, norm_kind: str = "rmsnorm",
-             seq_sharded: bool = True,
-             num_microbatches: Union[int, str, None] = None):
+def sp_block(tpc: TPContext, x, params, cfg, kind: str = "attn", *,
+             opts: Optional[SPOptions] = None, **kw):
     """A whole pre-norm transformer block — attention residual → FFN/MoE
-    residual — as a single-block period (see :func:`sp_period`): ONE
-    dataflow graph, optimized, executed in ONE ``shard_map``. The graph
-    spans the attention-out → FFN-in seam, so pass 2 fuses RS → residual →
-    LN → AG into one pipeline on every dense block and MoE routing flows
-    through the same IR.
+    residual — as a single-period special case of :func:`sp_period` (the
+    documented entry point for one block): ONE dataflow graph, optimized,
+    executed in ONE ``shard_map``. The graph spans the attention-out →
+    FFN-in seam, so pass 2 fuses RS → residual → LN → AG into one pipeline
+    on every dense block and MoE routing flows through the same IR.
 
     ``params`` is the block param dict from ``models.transformer.init_block``
     (``norm1``/``mixer``/``norm2``/``ffn``). x: (B, S, d) sequence-sharded
     (or replicated with ``seq_sharded=False`` — the decode-style allreduce
-    schedule). Returns (block output, aux loss)."""
-    return sp_period(tpc, x, (params,), cfg, (kind,), prefix_len=prefix_len,
-                     norm_kind=norm_kind, seq_sharded=seq_sharded,
-                     num_microbatches=num_microbatches)
+    schedule). Options via ``opts`` / :class:`SPOptions` keywords. Returns
+    (block output, aux loss)."""
+    return sp_period(tpc, x, (params,), cfg, (kind,),
+                     opts=_sp_opts(opts, kw))
 
 
 def tp_applicable(cfg, kind: str, tp: int) -> bool:

@@ -44,7 +44,12 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     rt = S.runtime_for(cfg, tp_mode=tp_mode, cais_chunks=cais_chunks)
     if rt_overrides:
-        rt = dataclasses.replace(rt, **rt_overrides)
+        from repro.runtime import TPConfig
+        ov = dict(rt_overrides)
+        tp_fields = {f.name for f in dataclasses.fields(TPConfig)}
+        tp_ov = {k: ov.pop(k) for k in list(ov) if k in tp_fields}
+        tp = dataclasses.replace(rt.tp, **tp_ov) if tp_ov else rt.tp
+        rt = dataclasses.replace(rt, tp=tp, **ov)
     model = build_model(cfg, rt)
     ins = S.input_specs(cfg, shape, rt, model=model)
 

@@ -41,7 +41,7 @@ VARIANTS = {
                "cais", 16, {}),
     "cais8-uni": ("unidirectional rings (CAIS-Base analogue): one ICI "
                   "direction idles — collective term should ~2×",
-                  "cais", 8, {"cais_bidirectional": False}),
+                  "cais", 8, {"bidirectional": False}),
     "no-remat": ("disable activation checkpointing: recompute flops "
                  "disappear (compute term ↓ ~25%), memory residency ↑",
                  "auto", 8, {"remat": False}),
@@ -142,7 +142,7 @@ def auto_variants(arch_name: str, shape_name: str, multi_pod: bool,
                f"chunks={row['chunks']} microbatches={row['microbatches']} "
                f"on the 2-block dense period proxy")
         variants[row["variant"]] = (hyp, row["backend"], row["chunks"],
-                                    {"tp_microbatches": row["microbatches"]})
+                                    {"microbatches": row["microbatches"]})
     return variants, grid
 
 

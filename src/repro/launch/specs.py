@@ -22,7 +22,7 @@ from jax.sharding import PartitionSpec as P
 from repro import sharding
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import build_model
-from repro.runtime import Runtime
+from repro.runtime import Runtime, TPConfig
 
 B_AX = sharding.BATCH_AXES      # ("pod", "data")
 D_AX = sharding.DATA_AXIS
@@ -49,10 +49,11 @@ def runtime_for(cfg: ArchConfig, tp_mode: str = "auto",
     ``tp_planner="perfsim"`` opts the period optimizer into the
     :mod:`repro.plan` simulated-makespan search (``"greedy"`` default)."""
     param_dtype = "bfloat16" if cfg.param_count() > 6e10 else "float32"
+    tp = TPConfig(mode=tp_mode, chunks=cais_chunks,
+                  microbatches=tp_microbatches, planner=tp_planner,
+                  sequence_parallel=True)
     return Runtime(compute_dtype="bfloat16", param_dtype=param_dtype,
-                   tp_mode=tp_mode, cais_chunks=cais_chunks,
-                   tp_microbatches=tp_microbatches, tp_planner=tp_planner,
-                   remat=True, sequence_parallel=True)
+                   tp=tp, remat=True)
 
 
 def _dim_ok(shape, i, mesh, axis) -> bool:

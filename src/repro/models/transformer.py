@@ -70,23 +70,19 @@ def _mixer_forward(kind, params, x, cfg, prefix_len=0):
 
 
 def _tp_context(rt: Runtime):
-    """Build a TPContext when an explicit collective backend is active
-    (backends with ``explicit = False`` — e.g. ``auto`` — leave scheduling
-    to XLA and run without shard_map)."""
+    """Build a TPContext (via the one ``TPConfig → TPContext.from_config``
+    path) when an explicit collective backend is active (backends with
+    ``explicit = False`` — e.g. ``auto`` — leave scheduling to XLA and run
+    without shard_map)."""
     from repro.core.backends import get_backend
-    from repro.core.primitives import CAISConfig
     from repro.core.tp import TPContext
 
-    backend = get_backend(rt.tp_mode)
+    backend = get_backend(rt.tp.mode)
     mesh = sharding.current_mesh()
     if (not backend.explicit or mesh is None
             or sharding.axis_size(mesh, sharding.MODEL_AXIS) <= 1):
         return None
-    return TPContext(mesh=mesh, backend=backend,
-                     cais=CAISConfig(num_chunks=rt.cais_chunks,
-                                     bidirectional=rt.cais_bidirectional),
-                     num_microbatches=rt.tp_microbatches,
-                     planner=rt.tp_planner)
+    return TPContext.from_config(rt.tp, mesh)
 
 
 def _sp_axis(rt: Runtime, x):
@@ -94,7 +90,7 @@ def _sp_axis(rt: Runtime, x):
     the sequence actually divides over the model axis. Ragged/decode
     sequences (S % axis != 0, incl. S=1) stay replicated instead of hitting
     an unsatisfiable sharding constraint."""
-    if not rt.sequence_parallel or x.shape[1] <= 1:
+    if not rt.tp.sequence_parallel or x.shape[1] <= 1:
         return None
     n = sharding.axis_size(sharding.current_mesh(), sharding.MODEL_AXIS)
     return sharding.MODEL_AXIS if n > 1 and x.shape[1] % n == 0 else None
@@ -306,7 +302,7 @@ def _blocks_forward(kinds, params_seq, x, cfg: ArchConfig, rt: Runtime,
     the run executes as ONE period-level dataflow graph in one ``shard_map``
     (``tp_mod.sp_period``) — the optimizer sees the block→block seams, so
     pass 2's cross-block RS→residual→LN→AG fusion and pass 3's asymmetric
-    pairing fire inside the model path. ``rt.tp_microbatches`` (via
+    pairing fire inside the model path. ``rt.tp.microbatches`` (via
     ``TPContext``) additionally splits the period into independent
     microbatch chains inside that one graph, the structure pass 3 needs to
     emit ``overlap_asym`` at all on a straight-line period. Otherwise falls

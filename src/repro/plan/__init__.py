@@ -15,6 +15,7 @@ from repro.plan.lower import (Lowering, fabric_from_hw, lower_graph,
                               synthesize_shapes)
 from repro.plan.search import (CHUNK_CANDIDATES, FixedPairing,
                                PerfsimPlanner, Plan, enumerate_pairings,
+                               microbatch_comp_hints,
                                microbatch_value_shapes, period_planner,
                                search_pairing, search_period)
 
@@ -22,7 +23,8 @@ __all__ = [
     "CHUNK_CANDIDATES", "CalibrationResult", "FixedPairing", "Lowering",
     "PerfsimPlanner", "Plan", "PlanCache", "RATIO_TOLERANCE", "calibrate",
     "default_cache", "enumerate_pairings", "fabric_from_hw",
-    "graph_signature", "lower_graph", "microbatch_value_shapes",
-    "period_planner", "plan_key", "policy_for_backend", "search_pairing",
-    "search_period", "simulate", "synthesize_shapes",
+    "graph_signature", "lower_graph", "microbatch_comp_hints",
+    "microbatch_value_shapes", "period_planner", "plan_key",
+    "policy_for_backend", "search_pairing", "search_period", "simulate",
+    "synthesize_shapes",
 ]

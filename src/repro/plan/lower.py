@@ -301,6 +301,15 @@ class Lowering:
                 t = self._phase(sim, st, self._gemm_flops(x, n.weights),
                                 self._bytes(outs[0]), coll, deps)
                 set_exits(n, t, outs)
+            elif n.op == "bwd_ag_gemm":
+                # adjoint of gemm_rs (docs/training.md): AG the seq-sharded
+                # cotangent (payload = the full gathered cotangent, same
+                # convention as ag_gemm), GEMM against the transposed
+                # weight; the gathered cotangent re-exposes for dw consumers
+                outs = self._gemm_outs(x, n.weights) or [x]
+                t = self._phase(sim, st, self._gemm_flops(x, n.weights),
+                                self._bytes(x), "ag", deps)
+                set_exits(n, t, outs + [x])
             elif n.op in ("fused_rs_ln_ag", "fused_rs_ln_ag_multi",
                           "fused_rs_ln"):
                 # weights = (w1, scale, *w2s): the RS-side GEMM, the norm

@@ -103,12 +103,16 @@ def search_pairing(g2: df.Graph, *,
                    num_microbatches: int = 1,
                    chunk_candidates: Sequence[Optional[int]] =
                    CHUNK_CANDIDATES,
-                   branch: int = 3, max_states: int = 64) -> Plan:
+                   branch: int = 3, max_states: int = 64,
+                   comp_hints: Optional[Dict[str, float]] = None) -> Plan:
     """Argmin over (pairing × num_chunks) for one post-pass-2 graph.
 
     Deterministic: candidate order is deterministic, and ties break toward
     the earlier candidate (strict ``<``), so the same inputs always return
-    the identical Plan — the property the plan cache relies on."""
+    the identical Plan — the property the plan cache relies on.
+    ``comp_hints`` (node name → global FLOPs for fn-carrying local math,
+    e.g. attention cores) flows into every candidate's lowering so
+    compute-bound pairings are weighted correctly."""
     if value_shapes is None or weight_shapes is None:
         vs, ws = lower_mod.synthesize_shapes(g2)
         value_shapes = {**vs, **(value_shapes or {})}
@@ -122,7 +126,7 @@ def search_pairing(g2: df.Graph, *,
         return lower_mod.simulate(
             graph, fabric, lower_mod.policy_for_backend(backend, chunks),
             value_shapes=value_shapes, weight_shapes=weight_shapes,
-            dtype_bytes=dtype_bytes)
+            dtype_bytes=dtype_bytes, comp_hints=comp_hints)
 
     candidates = enumerate_pairings(g2, branch=branch, max_states=max_states)
     greedy_graph = df.pair_asymmetric(g2)
@@ -150,6 +154,19 @@ def microbatch_value_shapes(x_shape: tuple, mb: int) -> Dict[str, tuple]:
     return {f"mb{i}.x": per for i in range(mb)}
 
 
+def microbatch_comp_hints(hints: Optional[Dict[str, float]], mb: int
+                          ) -> Optional[Dict[str, float]]:
+    """Re-key single-chain ``comp_hints`` onto a ``merge_graphs``-split
+    period graph: each chain's ``mb{i}.``-prefixed node does 1/mb of the
+    base node's FLOPs (the unsplit graph keeps the base keys)."""
+    if not hints:
+        return None
+    if mb <= 1:
+        return dict(hints)
+    return {f"mb{i}.{k}": v / mb
+            for i in range(mb) for k, v in hints.items()}
+
+
 def search_period(base: df.Graph, *,
                   fabric: Fabric,
                   backend: str = "cais",
@@ -159,12 +176,14 @@ def search_period(base: df.Graph, *,
                   mb_candidates: Sequence[int] = (1, 2, 4),
                   chunk_candidates: Sequence[Optional[int]] =
                   CHUNK_CANDIDATES,
-                  branch: int = 3, max_states: int = 48) -> Plan:
+                  branch: int = 3, max_states: int = 48,
+                  comp_hints: Optional[Dict[str, float]] = None) -> Plan:
     """Joint argmin over (num_microbatches × pairing × num_chunks) for a
     single-chain period graph ``base`` (pre-optimization, input ``x`` of
     global shape ``x_shape``). Every mb candidate re-runs passes 1–2 on the
     merged graph, then the pairing search; makespans are comparable because
-    every candidate schedules the same total work."""
+    every candidate schedules the same total work. ``comp_hints`` is keyed
+    on BASE node names and re-prefixed per chain."""
     best: Optional[Plan] = None
     batch = int(x_shape[0])
     for mb in mb_candidates:
@@ -179,7 +198,8 @@ def search_period(base: df.Graph, *,
             value_shapes=microbatch_value_shapes(x_shape, mb),
             weight_shapes=weight_shapes, dtype_bytes=dtype_bytes,
             num_microbatches=mb, chunk_candidates=chunk_candidates,
-            branch=branch, max_states=max_states)
+            branch=branch, max_states=max_states,
+            comp_hints=microbatch_comp_hints(comp_hints, mb))
         if best is None or p.makespan < best.makespan:
             best = p
     assert best is not None
@@ -212,15 +232,17 @@ def period_planner(base: df.Graph, *,
                    backend: str,
                    mb_candidates: Sequence[int],
                    hw=None,
-                   cache: Optional[cache_mod.PlanCache] = None
+                   cache: Optional[cache_mod.PlanCache] = None,
+                   comp_hints: Optional[Dict[str, float]] = None
                    ) -> Tuple[Plan, FixedPairing]:
     """The ``tp.sp_period`` entry point: decide (num_microbatches, pairing,
     num_chunks) for one single-chain period graph, through the plan cache.
 
     ``x_shape`` is the per-DP-replica activation (b_loc, S, d) — the payload
-    the TP collectives actually move. Returns the winning :class:`Plan` and
-    a :class:`FixedPairing` to hand to ``dataflow.optimize(planner=...)``
-    for the mb-merged graph."""
+    the TP collectives actually move. ``comp_hints`` (base-graph node name →
+    FLOPs, part of the cache key) prices the fn-carrying local math.
+    Returns the winning :class:`Plan` and a :class:`FixedPairing` to hand
+    to ``dataflow.optimize(planner=...)`` for the mb-merged graph."""
     from repro.hw import V5E
 
     hw = hw or V5E
@@ -231,7 +253,10 @@ def period_planner(base: df.Graph, *,
     if cache is not None:
         key = cache_mod.plan_key(
             base, {"x": tuple(x_shape)}, weight_shapes, dtype_bytes, fabric,
-            backend, extra={"kind": "period", "mb": list(mb_candidates)})
+            backend, extra={"kind": "period", "mb": list(mb_candidates),
+                            "hints": sorted(
+                                (k, float(v))
+                                for k, v in (comp_hints or {}).items())})
         hit = cache.get(key)
         if hit is not None:
             plan = Plan.from_dict(hit)
@@ -240,7 +265,8 @@ def period_planner(base: df.Graph, *,
                              x_shape=tuple(x_shape),
                              weight_shapes=weight_shapes,
                              dtype_bytes=dtype_bytes,
-                             mb_candidates=mb_candidates)
+                             mb_candidates=mb_candidates,
+                             comp_hints=comp_hints)
         if cache is not None and key is not None:
             cache.put(key, plan.to_dict())
     fallback = PerfsimPlanner(
@@ -248,7 +274,9 @@ def period_planner(base: df.Graph, *,
                                             plan.num_microbatches),
         weight_shapes=weight_shapes, dtype_bytes=dtype_bytes,
         fabric=fabric, backend=backend,
-        num_microbatches=plan.num_microbatches)
+        num_microbatches=plan.num_microbatches,
+        comp_hints=microbatch_comp_hints(comp_hints,
+                                         plan.num_microbatches))
     return plan, FixedPairing(plan, fallback)
 
 
@@ -271,7 +299,8 @@ class PerfsimPlanner:
                  chunk_candidates: Sequence[Optional[int]] =
                  CHUNK_CANDIDATES,
                  branch: int = 3, max_states: int = 64,
-                 cache: Optional[cache_mod.PlanCache] = None):
+                 cache: Optional[cache_mod.PlanCache] = None,
+                 comp_hints: Optional[Dict[str, float]] = None):
         self.value_shapes = value_shapes
         self.weight_shapes = weight_shapes
         self.dtype_bytes = dtype_bytes
@@ -282,6 +311,7 @@ class PerfsimPlanner:
         self.branch = branch
         self.max_states = max_states
         self.cache = cache
+        self.comp_hints = dict(comp_hints) if comp_hints else None
         self.plan: Optional[Plan] = None
 
     def _shapes(self, g2: df.Graph):
@@ -298,7 +328,10 @@ class PerfsimPlanner:
                 self.fabric, self.backend,
                 extra={"chunks": [c for c in self.chunk_candidates if c],
                        "branch": self.branch,
-                       "max_states": self.max_states})
+                       "max_states": self.max_states,
+                       "hints": sorted(
+                           (k, float(v))
+                           for k, v in (self.comp_hints or {}).items())})
             hit = self.cache.get(key)
             if hit is not None:
                 plan = Plan.from_dict(hit)
@@ -315,7 +348,8 @@ class PerfsimPlanner:
             dtype_bytes=self.dtype_bytes,
             num_microbatches=self.num_microbatches,
             chunk_candidates=self.chunk_candidates,
-            branch=self.branch, max_states=self.max_states)
+            branch=self.branch, max_states=self.max_states,
+            comp_hints=self.comp_hints)
         if self.cache is not None and key is not None:
             self.cache.put(key, plan.to_dict())
         self.plan = plan

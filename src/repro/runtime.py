@@ -1,10 +1,21 @@
-"""Runtime (non-architecture) knobs: dtypes, parallelism mode, remat, CAIS.
+"""Runtime (non-architecture) knobs: dtypes, parallelism config, remat.
 
 Separated from ArchConfig so the same architecture can be lowered with
 different distribution/precision strategies (baseline vs CAIS vs hillclimbed).
+
+Tensor-parallel knobs live on ONE nested config — :class:`TPConfig`, exposed
+as ``Runtime.tp`` — instead of the historical flat ``tp_*``/``cais_*`` field
+sprawl. The old flat names (``tp_mode``, ``cais_chunks``,
+``cais_bidirectional``, ``tp_microbatches``, ``tp_planner``,
+``sequence_parallel``) are still accepted as constructor keywords and
+readable as attributes, but both directions warn ``DeprecationWarning`` and
+forward to ``Runtime.tp``; the single construction path to an execution
+context is ``TPConfig → repro.core.tp.TPContext.from_config``.
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from dataclasses import dataclass
 from typing import Optional, Union
 
@@ -14,30 +25,55 @@ DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
 
 
 @dataclass(frozen=True)
+class TPConfig:
+    """Every tensor-parallel decision in one place (``Runtime.tp``).
+
+    ``mode`` is any :mod:`repro.core.backends` registry name; ``chunks=None``
+    lets the cais backend plan the ring chunking per collective from payload
+    bytes (:func:`repro.core.coordination.plan`); ``microbatches`` is the
+    period-graph batch split (int, or ``"auto"`` via ``plan_microbatches``;
+    ``"auto"`` never splits MoE periods — their aux loss is a per-batch
+    statistic the split would change, so that trade-off needs an explicit
+    integer opt-in); ``planner`` drives pass 3 of the graph optimizer
+    (``"greedy"`` or ``"perfsim"``); ``graph_backward`` routes training
+    gradients of dense periods through the graph-built custom VJP
+    (``docs/training.md``) instead of JAX autodiff of the executed forward
+    graph — the backward then lowers through the same ``optimize() →
+    execute()`` path and pass 3 can pair forward and backward collectives."""
+
+    mode: str = "auto"                  # any repro.core.backends name
+    sequence_parallel: bool = True      # SP-TP layout (paper's primary)
+    chunks: Optional[int] = None        # ring chunks; None = planner-chosen
+    bidirectional: bool = True          # asymmetric/bidirectional overlap
+    microbatches: Union[int, str] = 1   # period-graph batch split
+    planner: str = "greedy"             # pass-3 planner: greedy | perfsim
+    graph_backward: bool = True         # dense-period grads via the graph VJP
+
+
+# legacy flat Runtime field -> TPConfig field
+_LEGACY_TP = {
+    "tp_mode": "mode",
+    "sequence_parallel": "sequence_parallel",
+    "cais_chunks": "chunks",
+    "cais_bidirectional": "bidirectional",
+    "tp_microbatches": "microbatches",
+    "tp_planner": "planner",
+}
+
+
+def _warn_legacy(name: str) -> None:
+    warnings.warn(
+        f"Runtime.{name} is deprecated; use Runtime.tp "
+        f"(TPConfig.{_LEGACY_TP[name]})", DeprecationWarning, stacklevel=3)
+
+
+@dataclass(frozen=True, init=False)
 class Runtime:
     # numerics
     compute_dtype: str = "bfloat16"
     param_dtype: str = "float32"
-    # distribution
-    tp_mode: str = "auto"               # any repro.core.backends name
-    sequence_parallel: bool = True      # SP-TP layout (paper's primary)
-    # ring chunks (merge-table analogue); None = the cais backend plans the
-    # chunking per collective from payload bytes via coordination.plan()
-    cais_chunks: Optional[int] = None
-    cais_bidirectional: bool = True     # asymmetric/bidirectional overlap
-    # period-graph batch split: the explicit model path splits each
-    # layer_pattern period into this many independent microbatch chains
-    # inside ONE graph/shard_map so pass 3 can cross-pair their collectives
-    # (overlap_asym). int, or "auto" (coordination.plan_microbatches); 1 =
-    # unsplit (bit-identical to the pre-split path). "auto" never splits
-    # MoE periods — their aux loss is a per-batch statistic that splitting
-    # changes, so that trade-off needs an explicit integer opt-in
-    tp_microbatches: Union[int, str] = 1
-    # pass-3 schedule planner for the period-graph optimizer: "greedy"
-    # (deterministic nearest-independent-first pairing + α-β heuristics,
-    # the default) or "perfsim" (repro.plan: simulated-makespan argmin over
-    # pairings/chunks/microbatch splits, memoized under reports/plans/)
-    tp_planner: str = "greedy"
+    # distribution: ALL tensor-parallel knobs (see TPConfig)
+    tp: TPConfig = TPConfig()
     # memory
     remat: bool = True                  # activation checkpointing per period
     loss_chunk: int = 512               # CE computed in seq chunks (big vocabs)
@@ -47,6 +83,30 @@ class Runtime:
     # optimizer distribution
     zero_sharding: bool = True          # shard optimizer state over DP axes
 
+    def __init__(self, compute_dtype: str = "bfloat16",
+                 param_dtype: str = "float32",
+                 tp: Optional[TPConfig] = None,
+                 remat: bool = True, loss_chunk: int = 512,
+                 cache_layout: str = "context", zero_sharding: bool = True,
+                 **legacy):
+        bad = sorted(set(legacy) - set(_LEGACY_TP))
+        if bad:
+            raise TypeError(
+                f"Runtime() got unexpected keyword argument {bad[0]!r}")
+        for name in legacy:
+            _warn_legacy(name)
+        tp = tp if tp is not None else TPConfig()
+        if legacy:
+            tp = dataclasses.replace(
+                tp, **{_LEGACY_TP[k]: v for k, v in legacy.items()})
+        object.__setattr__(self, "compute_dtype", compute_dtype)
+        object.__setattr__(self, "param_dtype", param_dtype)
+        object.__setattr__(self, "tp", tp)
+        object.__setattr__(self, "remat", remat)
+        object.__setattr__(self, "loss_chunk", loss_chunk)
+        object.__setattr__(self, "cache_layout", cache_layout)
+        object.__setattr__(self, "zero_sharding", zero_sharding)
+
     @property
     def dtype(self):
         return DTYPES[self.compute_dtype]
@@ -54,6 +114,37 @@ class Runtime:
     @property
     def pdtype(self):
         return DTYPES[self.param_dtype]
+
+    # ----- deprecation shims: old flat names read through Runtime.tp -----
+    @property
+    def tp_mode(self) -> str:
+        _warn_legacy("tp_mode")
+        return self.tp.mode
+
+    @property
+    def sequence_parallel(self) -> bool:
+        _warn_legacy("sequence_parallel")
+        return self.tp.sequence_parallel
+
+    @property
+    def cais_chunks(self) -> Optional[int]:
+        _warn_legacy("cais_chunks")
+        return self.tp.chunks
+
+    @property
+    def cais_bidirectional(self) -> bool:
+        _warn_legacy("cais_bidirectional")
+        return self.tp.bidirectional
+
+    @property
+    def tp_microbatches(self) -> Union[int, str]:
+        _warn_legacy("tp_microbatches")
+        return self.tp.microbatches
+
+    @property
+    def tp_planner(self) -> str:
+        _warn_legacy("tp_planner")
+        return self.tp.planner
 
 
 SMOKE = Runtime(compute_dtype="float32", remat=False, loss_chunk=64)

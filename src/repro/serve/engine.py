@@ -45,9 +45,9 @@ class Engine:
         self.params = params
         self.cfg = cfg
         self.rt = rt
-        # resolve the collective backend up front: an unknown tp_mode fails
+        # resolve the collective backend up front: an unknown tp.mode fails
         # at engine construction, not deep inside the first jitted prefill
-        self.backend = get_backend(rt.tp_mode)
+        self.backend = get_backend(rt.tp.mode)
         self.sc = serve_cfg
         self.mesh = mesh
         self.extras = extras or {}

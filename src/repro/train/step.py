@@ -5,6 +5,15 @@ dry-run, trainer, and benchmarks all share.
 metrics)` with optional microbatch gradient accumulation (a `lax.scan` over
 microbatches — constant memory at any global batch). State pytree:
 {"params", "opt", "step"}.
+
+Gradients flow through `jax.value_and_grad` as usual; when
+``rt.tp.graph_backward`` is on (the default) the dense-period portion of
+that backward is NOT plain autodiff — ``sp_period`` carries a custom VJP
+whose backward is itself a dataflow graph lowered through ``optimize() →
+execute()`` (docs/training.md), so pass 3 can pair forward and backward
+collectives across microbatch chains. This composes with ``rt.remat``:
+``jax.checkpoint`` replays the period forward and then invokes the same
+graph-built backward.
 """
 from __future__ import annotations
 

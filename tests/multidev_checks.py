@@ -18,7 +18,7 @@ from repro.core import dataflow as df
 from repro.core import primitives as prim
 from repro.core.primitives import CAISConfig
 from repro.models import build_model
-from repro.runtime import Runtime
+from repro.runtime import Runtime, TPConfig
 
 FAILED = []
 
@@ -364,10 +364,10 @@ def main():
         check(f"period_split.{label}.auto",
               float(jnp.abs(gota - got1).max()), 1e-6)
     # the model path reaches the split via the Runtime knob
-    rt_mb = Runtime(compute_dtype="float32", remat=False, tp_mode="cais",
-                    loss_chunk=16, cais_chunks=2, tp_microbatches=2)
-    rt_u = Runtime(compute_dtype="float32", remat=False, tp_mode="cais",
-                   loss_chunk=16, cais_chunks=2)
+    rt_mb = Runtime(compute_dtype="float32", remat=False, loss_chunk=16,
+                    tp=TPConfig(mode="cais", chunks=2, microbatches=2))
+    rt_u = Runtime(compute_dtype="float32", remat=False, loss_chunk=16,
+                   tp=TPConfig(mode="cais", chunks=2))
     ps_rt = [tr_mod.init_block(jax.random.key(55 + j), "attn", cfg_blk,
                                jnp.float32) for j in range(2)]
     outs_rt = {}
@@ -434,7 +434,7 @@ def main():
         outs_dec = {}
         for mode in ("cais-count", "auto"):
             rt_dec = Runtime(compute_dtype="float32", remat=False,
-                             tp_mode=mode, loss_chunk=16, cais_chunks=2)
+                             loss_chunk=16, tp=TPConfig(mode=mode, chunks=2))
             with sharding.use_mesh(mesh4):
                 outs_dec[mode], _ = tr_mod.block_forward(
                     "attn", params_dec, x1, cfg_blk, rt_dec)
@@ -453,15 +453,15 @@ def main():
     x3 = x[:, :3]
     outs_rag = {}
     for mode in ("cais", "auto"):
-        rt_rag = Runtime(compute_dtype="float32", remat=False, tp_mode=mode,
-                         loss_chunk=16, cais_chunks=2)
+        rt_rag = Runtime(compute_dtype="float32", remat=False, loss_chunk=16,
+                         tp=TPConfig(mode=mode, chunks=2))
         with sharding.use_mesh(mesh4):
             outs_rag[mode], _ = tr_mod.block_forward(
                 "attn", params_dec, x3, cfg_blk, rt_rag)
     check("decode.ragged_s_parity",
           float(jnp.abs(outs_rag["cais"] - outs_rag["auto"]).max()), 1e-4)
-    rt_rag = Runtime(compute_dtype="float32", remat=False, tp_mode="cais",
-                     loss_chunk=16, cais_chunks=2)
+    rt_rag = Runtime(compute_dtype="float32", remat=False, loss_chunk=16,
+                     tp=TPConfig(mode="cais", chunks=2))
     params_rag_moe = tr_mod.init_block(jax.random.key(26), "attn",
                                        cfg_blk_moe, jnp.float32)
     with sharding.use_mesh(mesh4):
@@ -481,7 +481,7 @@ def main():
     losses = {}
     for mode in ("auto", "barrier", "cais"):
         rt = Runtime(compute_dtype="float32", remat=(mode == "cais"),
-                     tp_mode=mode, loss_chunk=16, cais_chunks=2)
+                     loss_chunk=16, tp=TPConfig(mode=mode, chunks=2))
         model = build_model(cfg, rt)
         params = model.init(key)
         with sharding.use_mesh(mesh2):
@@ -490,8 +490,8 @@ def main():
     check("model.auto_vs_cais", abs(losses["auto"] - losses["cais"]))
 
     # cais grads finite under remat
-    rt = Runtime(compute_dtype="float32", remat=True, tp_mode="cais",
-                 loss_chunk=16, cais_chunks=2)
+    rt = Runtime(compute_dtype="float32", remat=True, loss_chunk=16,
+                 tp=TPConfig(mode="cais", chunks=2))
     model = build_model(cfg, rt)
     params = model.init(key)
     with sharding.use_mesh(mesh2):
@@ -503,8 +503,8 @@ def main():
     # HLO structure: cais mode must contain collective-permutes and no
     # all-gather on the FFN path; barrier mode must contain all-gathers.
     def hlo_for(mode):
-        rt = Runtime(compute_dtype="float32", remat=False, tp_mode=mode,
-                     loss_chunk=16, cais_chunks=2)
+        rt = Runtime(compute_dtype="float32", remat=False, loss_chunk=16,
+                     tp=TPConfig(mode=mode, chunks=2))
         model = build_model(cfg, rt)
         params = model.init(key)
         with sharding.use_mesh(mesh2):
@@ -559,8 +559,8 @@ def main():
         bmoe = {"tokens": toks, "labels": toks}
         ls = {}
         for mode in ("auto", "cais"):
-            rt = Runtime(compute_dtype="float32", remat=False, tp_mode=mode,
-                         loss_chunk=16, cais_chunks=2)
+            rt = Runtime(compute_dtype="float32", remat=False, loss_chunk=16,
+                         tp=TPConfig(mode=mode, chunks=2))
             mm = build_model(cfg_moe, rt)
             pp = mm.init(jax.random.key(0))
             with sharding.use_mesh(mesh2):
@@ -568,6 +568,57 @@ def main():
         check("moe.auto_vs_cais_ce", abs(ls["auto"] - ls["cais"]), 2e-5)
     finally:
         tr.AUX_LOSS_WEIGHT = aux_w
+
+    # ---------------- graph-built backward: train grads vs autodiff -------
+    # Train-loss gradients routed through sp_period's graph-built custom VJP
+    # (the backward is itself a dataflow graph; fwd+bwd merge for pass 3,
+    # docs/training.md) must match plain JAX autodiff of the UNSPLIT forward
+    # at 1e-6 on the 4-way ring, per backend, for dense / GQA / MoE — and
+    # compose with remat (jax.checkpoint replays the period forward, then
+    # re-enters the same graph VJP).
+    cfg_gqa2 = cfg.scaled(num_kv_heads=2)
+
+    def train_grads(cfg_, batch_, rt_):
+        model_ = build_model(cfg_, rt_)
+        params_ = model_.init(jax.random.key(0))
+        with sharding.use_mesh(mesh2):
+            _, grads_ = jax.jit(jax.value_and_grad(model_.loss))(
+                params_, batch_)
+        return grads_
+
+    def max_leaf_err(a, b):
+        errs = jax.tree.map(
+            lambda u, v: float(jnp.abs(u.astype(jnp.float32)
+                                       - v.astype(jnp.float32)).max()), a, b)
+        return max(jax.tree.leaves(errs))
+
+    for label, cfg_g, batch_g, mb_g in (
+            ("dense", cfg, batch, 2), ("gqa", cfg_gqa2, batch, 2),
+            # an explicit microbatch split changes the MoE aux statistic, so
+            # MoE pins the (autodiff-fallback) unsplit path only
+            ("moe", cfg_moe, bmoe, 1)):
+        for mode in ("barrier", "cais"):
+            rt_graph = Runtime(
+                compute_dtype="float32", remat=False, loss_chunk=16,
+                tp=TPConfig(mode=mode, chunks=2, microbatches=mb_g,
+                            graph_backward=True))
+            rt_auto = Runtime(
+                compute_dtype="float32", remat=False, loss_chunk=16,
+                tp=TPConfig(mode=mode, chunks=2, graph_backward=False))
+            err = max_leaf_err(train_grads(cfg_g, batch_g, rt_graph),
+                               train_grads(cfg_g, batch_g, rt_auto))
+            check(f"train_grad.graph_vs_autodiff.{label}.{mode}", err, 1e-6)
+    for mode in ("barrier", "cais"):
+        rt_graph = Runtime(
+            compute_dtype="float32", remat=True, loss_chunk=16,
+            tp=TPConfig(mode=mode, chunks=2, microbatches=2,
+                        graph_backward=True))
+        rt_auto = Runtime(compute_dtype="float32", remat=False, loss_chunk=16,
+                          tp=TPConfig(mode=mode, chunks=2,
+                                      graph_backward=False))
+        err = max_leaf_err(train_grads(cfg, batch, rt_graph),
+                           train_grads(cfg, batch, rt_auto))
+        check(f"train_grad.graph_vs_autodiff.remat.{mode}", err, 1e-6)
 
     # ---------------- elastic resharding across meshes --------------------
     # Train 2 steps on a (2,4) mesh, checkpoint, restore onto (4,2) and

@@ -11,7 +11,7 @@ from repro.core import dataflow as df
 from repro.core import tp
 from repro.core.primitives import CAISConfig
 from repro.models.layers import activation, apply_norm
-from repro.runtime import Runtime
+from repro.runtime import Runtime, TPConfig
 
 # ---------------------------------------------------------------------------
 # registry
@@ -65,7 +65,7 @@ def test_engine_rejects_unknown_tp_mode():
 
     with pytest.raises(ValueError, match="unknown collective backend"):
         Engine(model=None, params=None, cfg=None,
-               rt=Runtime(tp_mode="bogus"))
+               rt=Runtime(tp=TPConfig(mode="bogus")))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,372 @@
+"""Differentiable period graphs (ISSUE 7): the backward pass is ITSELF a
+dataflow graph — every forward op in the post-pass-2 vocabulary has a
+declared adjoint (``df.ADJOINTS``), ``build_training_graph`` appends the
+emitted adjoints to the forward so ``optimize()`` sees ONE merged fwd+bwd
+graph, and pass 3 can pair a backward grad reduce-scatter against an
+independent chain's forward gather (the cross-direction ``overlap_asym``
+the paper targets).
+
+Covered here, all on the single-device reference path (``axis=None``
+execution — collectives are identity, so the adjoints reduce to plain
+linear algebra): per-op adjoint parity vs ``jax.vjp`` of the UNOPTIMIZED
+forward graph, whole-period parity (dx + every dw), optimize() value
+preservation on the training graph, the cross fwd/bwd pairing acceptance
+property, ``supports_backward`` gating, derived ``"w^T"`` weight
+materialization — plus the consolidated TP API surface that rides along
+(``TPConfig`` deprecation shims, ``SPOptions`` keyword unification).
+
+Multi-device gradient parity (train-step grads vs autodiff-of-unsplit on
+the 4-way ring, per backend, incl. remat) lives in multidev_checks.py.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dataflow as df
+from repro.core import tp
+from repro.runtime import Runtime, TPConfig
+
+
+def _toy_core(q, k, v):
+    return q * jax.nn.sigmoid(k) + v
+
+
+def _period_weights(key, n_blocks=2, d=16, f=24):
+    w = {}
+    for i in range(n_blocks):
+        p = f"b{i}."
+        ks = jax.random.split(jax.random.fold_in(key, i), 9)
+        w[p + "scale1"] = jax.random.normal(ks[0], (d,)) * 0.1 + 1.0
+        for j, kk in enumerate(("wq", "wk", "wv", "wo")):
+            w[p + kk] = jax.random.normal(ks[1 + j], (d, d)) * 0.1
+        w[p + "scale2"] = jax.random.normal(ks[5], (d,)) * 0.1 + 1.0
+        w[p + "w_up"] = jax.random.normal(ks[6], (d, f)) * 0.1
+        w[p + "w_gate"] = jax.random.normal(ks[7], (d, f)) * 0.1
+        w[p + "w_down"] = jax.random.normal(ks[8], (f, d)) * 0.1
+    return w
+
+
+def _pass2(g):
+    """The forward pipeline sp_period feeds the backward builder."""
+    return df.fuse_sublayer_chain(df.fuse_shared_gather(
+        df.fuse_compute_aware(g)))
+
+
+def _graph_grads(g2, weights, vals, gys, norm="rmsnorm", optimize=False):
+    """dx/dw through the graph-built backward (reference-path execution)."""
+    tg = df.build_training_graph(g2, norm=norm)
+    bwd = df.optimize(tg.graph) if optimize else tg.graph
+    env = dict(vals)
+    env.update(dict(zip(tg.grad_inputs, gys)))
+    res = df.execute(bwd, env, df.derived_weights(bwd, weights))
+    got = dict(zip(bwd.outputs, res))
+    dx = {v: got[g_] for v, g_ in tg.dx.items()}
+    dw = {}
+    for k, parts in tg.dweights.items():
+        acc = got[parts[0]]
+        for p_ in parts[1:]:
+            acc = acc + got[p_]
+        dw[k] = acc
+    return dx, dw
+
+
+def _ref_grads(g, weights, vals, gys):
+    """jax.vjp of the UNOPTIMIZED forward graph (reference execution)."""
+    names = sorted(vals)
+
+    def f(xs, w):
+        return tuple(df.execute(g, dict(zip(names, xs)), w))
+
+    _, pull = jax.vjp(f, tuple(vals[k] for k in names), weights)
+    dxs, dw = pull(tuple(gys))
+    return dict(zip(names, dxs)), dw
+
+
+def _assert_grads_match(g, g2, weights, vals, norm="rmsnorm"):
+    outs = df.execute(g, vals, weights)
+    gys = [jnp.cos(jnp.arange(o.size, dtype=o.dtype)).reshape(o.shape) * 0.3
+           for o in outs]
+    dx_r, dw_r = _ref_grads(g, weights, vals, gys)
+    for optimize in (False, True):
+        dx_g, dw_g = _graph_grads(g2, weights, vals, gys, norm=norm,
+                                  optimize=optimize)
+        assert set(dx_g) == {k for k, v in dx_r.items()
+                             if np.abs(np.asarray(v)).max() > 0} \
+            or set(dx_g) == set(dx_r)
+        for k in dx_g:
+            np.testing.assert_allclose(np.asarray(dx_g[k]),
+                                       np.asarray(dx_r[k]), atol=1e-5,
+                                       err_msg=f"dx[{k}] opt={optimize}")
+        for k in weights:
+            np.testing.assert_allclose(np.asarray(dw_g[k]),
+                                       np.asarray(dw_r[k]), atol=1e-5,
+                                       err_msg=f"dw[{k}] opt={optimize}")
+
+
+# ---------------------------------------------------------------------------
+# per-op adjoints vs jax.vjp of the unoptimized graph
+# ---------------------------------------------------------------------------
+
+
+def test_adjoint_ag_gemm():
+    """ag_gemm ↔ grad reduce-scatter through w^T + re-gathered dw."""
+    d, f = 8, 12
+    g = df.Graph([df.Node("x", "input"),
+                  df.Node("y", "ag_gemm", ("x",), ("w",))], ("y",))
+    w = {"w": jax.random.normal(jax.random.key(0), (d, f)) * 0.3}
+    x = jax.random.normal(jax.random.key(1), (2, 6, d))
+    _assert_grads_match(g, g, w, {"x": x})
+
+
+def test_adjoint_ag_gemm_multi():
+    """Shared gather: one concat cotangent reduce-scatters through the
+    concatenated transposed weight ("wa+wb^T")."""
+    d, f = 8, 12
+    g = df.Graph([df.Node("x", "input"),
+                  df.Node("qkv", "ag_gemm_multi", ("x",), ("wa", "wb"),
+                          outputs=("ya", "yb"))], ("ya", "yb"))
+    key = jax.random.key(2)
+    w = {"wa": jax.random.normal(jax.random.fold_in(key, 0), (d, f)) * 0.3,
+         "wb": jax.random.normal(jax.random.fold_in(key, 1), (d, f)) * 0.3}
+    x = jax.random.normal(jax.random.fold_in(key, 2), (2, 6, d))
+    _assert_grads_match(g, g, w, {"x": x})
+
+
+def test_adjoint_gemm_rs():
+    """gemm_rs ↔ grad all-gather (bwd_ag_gemm): dx through w^T plus the
+    full-cotangent leg feeding dw."""
+    d, f = 8, 12
+    g = df.Graph([df.Node("h", "input"),
+                  df.Node("y", "gemm_rs", ("h",), ("w",))], ("y",))
+    w = {"w": jax.random.normal(jax.random.key(3), (f, d)) * 0.3}
+    h = jax.random.normal(jax.random.key(4), (2, 6, f))
+    _assert_grads_match(g, g, w, {"h": h})
+
+
+def test_adjoint_fused_seam():
+    """fused_rs_ln_ag (pass-2 seam) has a fused adjoint: grad RS through the
+    gather leg, norm VJP on the re-exposed z, grad AG back through the RS
+    leg — pinned against jax.vjp of the unoptimized sub-layer graph."""
+    g = df.sublayer_graph()
+    g2 = _pass2(g)
+    assert any(n.op == "fused_rs_ln_ag" for n in g2.nodes)
+    d, f = 10, 14
+    key = jax.random.key(5)
+    w = {"w1": jax.random.normal(jax.random.fold_in(key, 0), (d, f)) * 0.3,
+         "scale": jax.random.normal(jax.random.fold_in(key, 1), (f,)) * 0.1
+         + 1.0,
+         "w2": jax.random.normal(jax.random.fold_in(key, 2), (f, d)) * 0.3}
+    x = jax.random.normal(jax.random.fold_in(key, 3), (2, 4, d))
+    _assert_grads_match(g, g2, w, {"x": x})
+
+
+def test_adjoint_dense_period():
+    """Whole 2-block dense period: every weight gradient and dx through the
+    graph-built backward matches autodiff of the unoptimized period. The IR
+    norm is scale-only (rmsnorm) — layernorm archs never reach the graph
+    path (``_whole_block_applicable`` gates on ``cfg.norm``)."""
+    g = tp.dense_period_graph([_toy_core, _toy_core], True, "silu")
+    w = _period_weights(jax.random.key(6))
+    x = jax.random.normal(jax.random.key(7), (2, 8, 16))
+    _assert_grads_match(g, _pass2(g), w, {"x": x}, norm="rmsnorm")
+
+
+def test_adjoint_microbatch_chains_share_weights():
+    """Two merged microbatch chains: each chain contributes one dw per use
+    and the summed group equals autodiff of the merged graph."""
+    base = tp.dense_period_graph([_toy_core, _toy_core], True, "silu")
+    g = tp.microbatch_period_graph(base, 2)
+    w = _period_weights(jax.random.key(8))
+    key = jax.random.key(9)
+    vals = {"mb0.x": jax.random.normal(jax.random.fold_in(key, 0),
+                                       (1, 8, 16)),
+            "mb1.x": jax.random.normal(jax.random.fold_in(key, 1),
+                                       (1, 8, 16))}
+    _assert_grads_match(g, _pass2(g), w, vals)
+
+
+# ---------------------------------------------------------------------------
+# structure: merged fwd+bwd graph, cross-direction pass 3, gating
+# ---------------------------------------------------------------------------
+
+
+def _bwd_component(name):
+    return "adj." in name or name.startswith(("d.", "dsum", "dcat.",
+                                              "dfull.", "dznorm.", "dz.",
+                                              "xg.", "zg.", "znr."))
+
+
+def test_cross_direction_overlap_asym():
+    """Acceptance (ISSUE 7): the optimized merged fwd/bwd graph of a 2-chain
+    microbatch period contains ≥1 overlap_asym spanning a FORWARD node of
+    one chain and a BACKWARD node of another — pass 3 ranks cross-direction
+    pairs first on training graphs."""
+    base = tp.dense_period_graph([_toy_core, _toy_core], True, "silu")
+    g2 = _pass2(tp.microbatch_period_graph(base, 2))
+    tg = df.build_training_graph(g2)
+    opt = df.optimize(tg.graph)
+    pairs = [n for n in opt.nodes if n.op == "overlap_asym"]
+    assert pairs, [(n.name, n.op) for n in opt.nodes]
+    cross = [n for n in pairs
+             if len({_bwd_component(s) for s in n.name.split("+")}) == 2]
+    assert cross, [n.name for n in pairs]
+
+
+def test_training_graph_optimize_idempotent():
+    base = tp.dense_period_graph([_toy_core, _toy_core], True, "silu")
+    tg = df.build_training_graph(_pass2(tp.microbatch_period_graph(base, 2)))
+    opt = df.optimize(tg.graph)
+    assert [(n.name, n.op) for n in opt.nodes] == \
+        [(n.name, n.op) for n in df.optimize(opt).nodes]
+
+
+def test_forward_only_pairing_unchanged():
+    """The cross-direction preference must NOT disturb forward-only graphs:
+    the PR-4/5 pinned pairing decision stays bit-identical."""
+    mk = lambda: tp.dense_block_graph(_toy_core, True, "silu")
+    opt = df.optimize(df.merge_graphs([mk(), mk()], share_weights=True))
+    pairs = [n for n in opt.nodes if n.op == "overlap_asym"]
+    assert [n.name for n in pairs] == ["mb0.rs2+mb1.q+mb1.k+mb1.v"]
+
+
+def test_supports_backward_gating():
+    """Ops without a declared adjoint (MoE routing, gemm_ar) gate the graph
+    backward off; build_training_graph refuses them loudly."""
+    g = tp.dense_period_graph([_toy_core, _toy_core], True, "silu")
+    assert df.supports_backward(_pass2(g))
+    g_ar = df.Graph([df.Node("x", "input"),
+                     df.Node("y", "gemm_ar", ("x",), ("w",))], ("y",))
+    assert not df.supports_backward(g_ar)
+    with pytest.raises(df.GraphError, match="supports_backward"):
+        df.build_training_graph(g_ar)
+    # pass-3 output (overlap_asym) is also out of vocabulary: the backward
+    # is built from the PRE-pass-3 graph, then optimized as one
+    opt = df.optimize(df.dual_sublayer_graph())
+    assert not df.supports_backward(opt)
+
+
+def test_derived_weights_transpose_and_concat():
+    d, f = 6, 8
+    g = df.Graph([df.Node("x", "input"),
+                  df.Node("qkv", "ag_gemm_multi", ("x",), ("wa", "wb"),
+                          outputs=("ya", "yb"))], ("ya", "yb"))
+    tg = df.build_training_graph(g)
+    keys = df.derived_weight_keys(tg.graph)
+    assert "wa+wb^T" in keys
+    wa = jnp.arange(d * f, dtype=jnp.float32).reshape(d, f)
+    wb = -wa
+    ext = df.derived_weights(tg.graph, {"wa": wa, "wb": wb})
+    np.testing.assert_array_equal(
+        np.asarray(ext["wa+wb^T"]),
+        np.asarray(jnp.concatenate([wa, wb], axis=-1).T))
+    shapes = df.derived_weight_shapes(tg.graph, {"wa": (d, f), "wb": (d, f)})
+    assert shapes["wa+wb^T"] == (2 * f, d)
+
+
+# ---------------------------------------------------------------------------
+# consolidated TP API surface: TPConfig shims + SPOptions
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_legacy_kwargs_warn_and_forward():
+    with pytest.warns(DeprecationWarning, match="tp_mode"):
+        rt = Runtime(tp_mode="cais", cais_chunks=4)
+    assert rt.tp.mode == "cais" and rt.tp.chunks == 4
+    with pytest.warns(DeprecationWarning, match="tp_microbatches"):
+        rt = Runtime(tp_microbatches=2, tp_planner="perfsim")
+    assert rt.tp.microbatches == 2 and rt.tp.planner == "perfsim"
+    # legacy kwargs fold INTO an explicit tp= base, not over it
+    with pytest.warns(DeprecationWarning, match="cais_bidirectional"):
+        rt = Runtime(tp=TPConfig(mode="cais"), cais_bidirectional=False)
+    assert rt.tp.mode == "cais" and rt.tp.bidirectional is False
+
+
+def test_runtime_legacy_properties_warn_and_read_through():
+    rt = Runtime(tp=TPConfig(mode="barrier", chunks=8, microbatches=2,
+                             planner="perfsim", sequence_parallel=False,
+                             bidirectional=False))
+    for name, want in (("tp_mode", "barrier"), ("cais_chunks", 8),
+                       ("tp_microbatches", 2), ("tp_planner", "perfsim"),
+                       ("sequence_parallel", False),
+                       ("cais_bidirectional", False)):
+        with pytest.warns(DeprecationWarning, match=name):
+            assert getattr(rt, name) == want
+
+
+def test_runtime_unknown_kwarg_still_raises():
+    with pytest.raises(TypeError, match="tp_bogus"):
+        Runtime(tp_bogus=1)
+
+
+def test_tpcontext_from_config_single_path():
+    from repro import sharding
+
+    mesh = sharding.make_mesh((1, 1), ("data", "model"))
+    cfgtp = TPConfig(mode="cais", chunks=4, bidirectional=False,
+                     microbatches=2, planner="perfsim",
+                     graph_backward=False)
+    tpc = tp.TPContext.from_config(cfgtp, mesh)
+    assert tpc.backend.name == "cais"   # resolved to the registry instance
+    assert tpc.cais.num_chunks == 4 and tpc.cais.bidirectional is False
+    assert tpc.num_microbatches == 2 and tpc.planner == "perfsim"
+    assert tpc.graph_backward is False
+
+
+def _mini_setup():
+    import repro.models.transformer as tr
+    from repro import sharding
+    from repro.configs import get_arch
+    from repro.core.primitives import CAISConfig
+
+    cfg = get_arch("deepseek-7b").smoke().scaled(
+        num_layers=1, d_model=32, num_heads=4, num_kv_heads=4, head_dim=8,
+        d_ff=48)
+    mesh = sharding.make_mesh((1, 1), ("data", "model"))
+    tpc = tp.TPContext(mesh=mesh, backend="cais",
+                       cais=CAISConfig(num_chunks=1))
+    params = tr.init_block(jax.random.key(11), "attn", cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(12), (2, 16, 32), jnp.float32)
+    return tpc, x, params, cfg
+
+
+def test_sp_options_object_equals_keywords():
+    """sp_block/sp_period accept the shared SPOptions object; the options
+    path and the keyword path are the same call."""
+    tpc, x, params, cfg = _mini_setup()
+    a, _ = tp.sp_block(tpc, x, params, cfg, "attn", norm_kind=cfg.norm)
+    b, _ = tp.sp_block(tpc, x, params, cfg, "attn",
+                       opts=tp.SPOptions(norm_kind=cfg.norm))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c, _ = tp.sp_period(tpc, x, (params,), cfg, ("attn",),
+                        opts=tp.SPOptions(norm_kind=cfg.norm))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_sp_options_unknown_keyword_raises():
+    tpc, x, params, cfg = _mini_setup()
+    with pytest.raises(TypeError, match="bogus"):
+        tp.sp_block(tpc, x, params, cfg, "attn", bogus=1)
+
+
+def test_sp_period_grad_matches_autodiff_single_device():
+    """End-to-end on the tp=1 mesh: grads of a scalar loss through
+    sp_period's custom VJP match the graph_backward=False autodiff path."""
+    import dataclasses as _dc
+
+    tpc, x, params, cfg = _mini_setup()
+    tpc_ref = _dc.replace(tpc, graph_backward=False)
+
+    def loss(tpc_):
+        def f(x_, p_):
+            out, _ = tp.sp_period(tpc_, x_, (p_,), cfg, ("attn",),
+                                  norm_kind=cfg.norm)
+            return jnp.sum(out * out)
+        return jax.grad(f, argnums=(0, 1))(x, params)
+
+    g_vjp = loss(tpc)
+    g_ref = loss(tpc_ref)
+    for a, b in zip(jax.tree.leaves(g_vjp), jax.tree.leaves(g_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
