@@ -13,7 +13,7 @@ graph-built backward (``TPConfig.graph_backward`` — the ``sp_period``
 custom VJP, docs/training.md) against plain JAX autodiff of the executed
 forward. With ``$REPRO_BENCH_JSON`` set, every row (including the
 subprocess cells) is dumped as the JSON baseline the CI slow-suite
-commits as ``BENCH_pr7.json`` — a ``meta.sublayer_env`` row records the shapes/mode
+commits as ``BENCH_pr8.json`` — a ``meta.sublayer_env`` row records the shapes/mode
 so baselines regenerated under different settings are not silently
 compared. Measured cells run on CPU-emulated virtual devices, where
 ``collective_permute`` chains serialize (no real bidirectional links), so

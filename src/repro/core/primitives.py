@@ -205,8 +205,10 @@ def gemm_rs(x: jnp.ndarray, w: jnp.ndarray, axis: str,
         xc = lax.dynamic_slice_in_dim(x, j * S_loc, S_loc, axis=1)
         return xc @ w
 
-    if cais.bidirectional and n % 2 == 0:
+    if cais.bidirectional and n % 2 == 0 and S_loc % 2 == 0:
         # split S_loc rows in half; each half reduced around opposite rings
+        # (odd S_loc can't split evenly — the unidirectional ring below
+        # handles it; S_loc == 1 shows up on serve-period graphs at S == n)
         h = S_loc // 2
 
         def partial_half(j, lo):

@@ -979,6 +979,187 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str], *,
     return period(x, *tuple(weights.values())), jnp.float32(0.0)
 
 
+def _serve_attention_core_fn(cfg, tp: int, window: int = 0) -> Callable:
+    """The paged-serving attention core as a multi-output ``custom`` IR node
+    fn: besides q/k/v it takes the :class:`repro.models.attention.KVView`
+    arrays (block tables, positions, context lens) and this block's KV pools
+    as graph *inputs*, scatters the step's K/V through the block tables,
+    attends over each row's gathered context, and returns the updated pools
+    as extra outputs — the same multi-output convention as the MoE ``route``
+    node. KV-head handling mirrors :func:`_attention_core_fn`: sharded pools
+    hold this device's heads; replicated (GQA) pools are written identically
+    on every device and sliced per-device for the core."""
+    from repro.models.attention import (attention_core, paged_lookup,
+                                        paged_update)
+    from repro.models.layers import apply_rope
+
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    kv_sharded = Hkv % tp == 0
+
+    def core(q, k, v, bt, qpos, ctx, kp, vp):
+        B_, S = q.shape[0], q.shape[1]
+        H_loc = max(H // tp, 1)
+        Hkv_loc = max(Hkv // tp, 1) if kv_sharded else Hkv
+        pos = jnp.maximum(qpos, 0)
+        q = apply_rope(q.reshape(B_, S, H_loc, dh), pos, cfg.rope_theta)
+        k = apply_rope(k.reshape(B_, S, Hkv_loc, dh), pos, cfg.rope_theta)
+        v = v.reshape(B_, S, Hkv_loc, dh)
+        kp, vp = paged_update(kp, vp, k, v, bt, qpos)
+        kk, vv, kv_pos = paged_lookup(kp, vp, bt, ctx)
+        if not kv_sharded:
+            g = H // Hkv                    # q heads per kv head
+            need = max(H_loc // g, 1)
+            start = (jax.lax.axis_index(MODEL) * H_loc) // g
+            kk = jax.lax.dynamic_slice_in_dim(kk, start, need, axis=2)
+            vv = jax.lax.dynamic_slice_in_dim(vv, start, need, axis=2)
+        o = attention_core(q, kk, vv, q_positions=qpos, kv_positions=kv_pos,
+                           causal=True, window=window)
+        return o.reshape(B_, S, H_loc * dh), kp, vp
+
+    return core
+
+
+def _serve_block_fragment(tpc: TPContext, params, cfg, kind: str, idx: int,
+                          src: str, dtype=jnp.float32):
+    """One dense block as a serve-period graph fragment (replicated
+    activations, allreduce schedule): like :func:`_block_graph_fragment`
+    with ``seq_sharded=False``, except the attention core is the
+    pool-carrying :func:`_serve_attention_core_fn` node. Returns
+    (nodes, out_value, weights, specs)."""
+    p = f"b{idx}."
+    tp = tpc.tp
+    m = params["mixer"]
+    kv_sharded = cfg.num_kv_heads % tp == 0
+    window = cfg.window if kind == "swa" else 0
+    core = _serve_attention_core_fn(cfg, tp, window=window)
+
+    kv_spec = (None, MODEL) if kv_sharded else (None, None)
+    weights = {
+        p + "scale1": params["norm1"]["scale"].astype(dtype),
+        p + "wq": m["wq"].astype(dtype), p + "wk": m["wk"].astype(dtype),
+        p + "wv": m["wv"].astype(dtype), p + "wo": m["wo"].astype(dtype),
+        p + "scale2": params["norm2"]["scale"].astype(dtype),
+    }
+    specs = {
+        p + "scale1": (None,), p + "wq": (None, MODEL), p + "wk": kv_spec,
+        p + "wv": kv_spec, p + "wo": (MODEL, None), p + "scale2": (None,),
+    }
+    nodes = [
+        df.Node(f"{p}ln1", "layernorm", (src,), (f"{p}scale1",)),
+        df.Node(f"{p}q", "gemm_col", (f"{p}ln1",), (f"{p}wq",)),
+        df.Node(f"{p}k", "gemm_col", (f"{p}ln1",), (f"{p}wk",)),
+        df.Node(f"{p}v", "gemm_col", (f"{p}ln1",), (f"{p}wv",)),
+        df.Node(f"{p}o", "custom",
+                (f"{p}q", f"{p}k", f"{p}v", "bt", "qpos", "ctx",
+                 f"{p}kp", f"{p}vp"),
+                outputs=(f"{p}o", f"{p}kpn", f"{p}vpn"), fn=core),
+        df.Node(f"{p}proj", "gemm_row", (f"{p}o",), (f"{p}wo",)),
+        df.Node(f"{p}rs1", "allreduce", (f"{p}proj",)),
+        df.Node(f"{p}r1", "residual", (f"{p}rs1", src)),
+        df.Node(f"{p}ln2", "layernorm", (f"{p}r1",), (f"{p}scale2",)),
+    ]
+    f = params["ffn"]
+    has_gate = "w_gate" in f
+    nodes += _ffn_chain_nodes(f"{p}ln2", f"{p}rs2", has_gate, cfg.act,
+                              tag="2", p=p, seq_sharded=False)
+    nodes.append(df.Node(f"{p}r2", "residual", (f"{p}rs2", f"{p}r1")))
+    weights[p + "w_up"] = f["w_up"].astype(dtype)
+    specs[p + "w_up"] = (None, MODEL)
+    if has_gate:
+        weights[p + "w_gate"] = f["w_gate"].astype(dtype)
+        specs[p + "w_gate"] = (None, MODEL)
+    weights[p + "w_down"] = f["w_down"].astype(dtype)
+    specs[p + "w_down"] = (MODEL, None)
+    return nodes, f"{p}r2", weights, specs
+
+
+def sp_serve_period(tpc: TPContext, x, params_seq, cfg,
+                    kinds: Sequence[str], pools_seq, view, *,
+                    norm_kind: str = "rmsnorm"):
+    """A whole period of a mixed prefill+decode *serving* step as ONE
+    dataflow graph in ONE ``shard_map`` — the serving analogue of
+    :func:`sp_period`. The activation stays replicated (decode S=1 and
+    chunked-prefill S % tp ≠ 0 both fit), so pass 1 fuses every
+    out-projection/FFN-down reduction into backend-dispatched ``gemm_ar`` —
+    TP is never silently unsharded under serving. The paged KV pools, block
+    tables, and position/context arrays enter the graph as extra inputs of
+    each block's attention ``custom`` node, and the updated pools leave as
+    graph outputs. With ``planner="perfsim"`` the optimized schedule comes
+    from the simulated-makespan search over the serve-period graph itself
+    (value shapes include the real pool/table shapes), through the plan
+    cache. Pools are shared unbatched state: callers must run with dp == 1
+    (gated in ``models.transformer._blocks_step``).
+
+    x: (B, S_step, d) replicated; ``pools_seq`` one ``{"k", "v"}`` pool dict
+    per block; ``view`` a :class:`repro.models.attention.KVView`. Returns
+    (period output, new pools list)."""
+    dtype = x.dtype
+    n = len(kinds)
+    nodes = [df.Node("x", "input"), df.Node("bt", "input"),
+             df.Node("qpos", "input"), df.Node("ctx", "input")]
+    weights: Dict[str, jnp.ndarray] = {}
+    specs: Dict[str, tuple] = {}
+    src = "x"
+    for i, (params, kind) in enumerate(zip(params_seq, kinds)):
+        nodes += [df.Node(f"b{i}.kp", "input"), df.Node(f"b{i}.vp", "input")]
+        ns, src, w, s = _serve_block_fragment(tpc, params, cfg, kind, i, src,
+                                              dtype=dtype)
+        nodes += ns
+        weights.update(w)
+        specs.update(s)
+    pool_outs = tuple(v for i in range(n)
+                      for v in (f"b{i}.kpn", f"b{i}.vpn"))
+    base = df.Graph(nodes, outputs=(src,) + pool_outs)
+
+    planner = None
+    b_loc = max(int(x.shape[0]) // max(sharding.dp_size(tpc.mesh), 1), 1)
+    hints = _core_comp_hints(cfg, kinds, b_loc, int(x.shape[1]))
+    if tpc.planner == "perfsim":
+        from repro import plan as plan_mod
+
+        vshapes = {"x": (b_loc,) + tuple(int(d) for d in x.shape[1:]),
+                   "bt": tuple(view.block_tables.shape),
+                   "qpos": tuple(view.positions.shape),
+                   "ctx": tuple(view.context_lens.shape)}
+        for i, pool in enumerate(pools_seq):
+            vshapes[f"b{i}.kp"] = tuple(pool["k"].shape)
+            vshapes[f"b{i}.vp"] = tuple(pool["v"].shape)
+        planner = plan_mod.PerfsimPlanner(
+            value_shapes=vshapes,
+            weight_shapes={k: tuple(v.shape) for k, v in weights.items()},
+            dtype_bytes=np.dtype(x.dtype).itemsize,
+            fabric=plan_mod.fabric_from_hw(tpc.hw, max(tpc.tp, 2)),
+            backend=tpc.mode, cache=plan_mod.default_cache(),
+            comp_hints=hints)
+    graph = df.optimize(base, planner=planner)
+    names = list(weights)
+
+    def local(x, bt, qpos, ctx, *rest):
+        pools, ws = rest[:2 * n], rest[2 * n:]
+        vals = {"x": x, "bt": bt, "qpos": qpos, "ctx": ctx}
+        for i in range(n):
+            vals[f"b{i}.kp"] = pools[2 * i]
+            vals[f"b{i}.vp"] = pools[2 * i + 1]
+        return df.execute(graph, vals, dict(zip(names, ws)), axis=MODEL,
+                          cais=tpc.cais, norm=norm_kind,
+                          backend=tpc.backend)
+
+    kv_sharded = cfg.num_kv_heads % tpc.tp == 0
+    pool_spec = (None, None, MODEL, None) if kv_sharded \
+        else (None, None, None, None)
+    x_spec = (BATCH, None, None)
+    in_specs = ([x_spec, (None, None), (None, None), (None,)]
+                + [pool_spec] * (2 * n) + [specs[k] for k in names])
+    out_specs = [x_spec] + [pool_spec] * (2 * n)
+    flat_pools = [p[kk] for p in pools_seq for kk in ("k", "v")]
+    res = _smap(tpc, local, in_specs, out_specs)(
+        x, view.block_tables, view.positions, view.context_lens,
+        *flat_pools, *weights.values())
+    new_pools = [{"k": res[1 + 2 * i], "v": res[2 + 2 * i]}
+                 for i in range(n)]
+    return res[0], new_pools
+
+
 def sp_block(tpc: TPContext, x, params, cfg, kind: str = "attn", *,
              opts: Optional[SPOptions] = None, **kw):
     """A whole pre-norm transformer block — attention residual → FFN/MoE

@@ -34,9 +34,13 @@ def _tokens_for_step(cfg: ArchConfig, batch: int, seq: int, seed: int,
 
 
 def make_batch(cfg: ArchConfig, shape: ShapeConfig, step: int,
-               data: DataConfig = DataConfig(),
+               data: Optional[DataConfig] = None,
                host_slice: Optional[slice] = None) -> Dict[str, np.ndarray]:
     """One global (or host-sliced) training batch for (arch, shape, step)."""
+    # default constructed per call: a def-time default would be one shared
+    # instance across every caller (same pattern as the old Engine bug —
+    # harmless only while the config stays frozen)
+    data = data if data is not None else DataConfig()
     b, s = shape.global_batch, shape.seq_len
     toks = _tokens_for_step(cfg, b, s, data.seed, step, data.zipf_alpha)
     if host_slice is not None:
@@ -58,8 +62,9 @@ def make_batch(cfg: ArchConfig, shape: ShapeConfig, step: int,
 
 
 def iterate(cfg: ArchConfig, shape: ShapeConfig, start_step: int = 0,
-            data: DataConfig = DataConfig(),
+            data: Optional[DataConfig] = None,
             host_slice: Optional[slice] = None) -> Iterator[Dict[str, np.ndarray]]:
+    data = data if data is not None else DataConfig()
     step = start_step
     while True:
         yield make_batch(cfg, shape, step, data, host_slice)

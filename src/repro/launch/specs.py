@@ -250,6 +250,25 @@ def cache_shardings(mesh: Mesh, cache_shape, layout: str = "context"):
     return jax.tree_util.tree_map_with_path(one, cache_shape)
 
 
+def pool_shardings(cfg: ArchConfig, mesh: Mesh, pools_shape):
+    """Paged-KV pool placement for the serving path (docs/serving.md).
+    Leaves are (NB, BS, Hkv, dh) — possibly with a leading stacked-layer
+    dim — and are UNBATCHED shared state: heads shard over the model axis
+    exactly when they divide it (mirroring ``models.transformer.pool_pspec``
+    inside the graph path); GQA pools whose heads don't divide stay fully
+    replicated (every device writes identical values)."""
+    tp = sharding.tp_size(mesh)
+    head = M_AX if tp > 1 and cfg.num_kv_heads % tp == 0 else None
+
+    def one(path, leaf):
+        nd = len(leaf.shape)
+        tail = (None, None, head, None) if nd >= 4 else (None,) * nd
+        spec = (None,) * (nd - len(tail)) + tail
+        spec = sanitize_spec(mesh, spec, leaf.shape)
+        return sharding.named_sharding(mesh, *spec)
+    return jax.tree_util.tree_map_with_path(one, pools_shape)
+
+
 # ---------------------------------------------------------------------------
 # input_specs — ShapeDtypeStruct stand-ins per (arch × shape)
 # ---------------------------------------------------------------------------

@@ -17,7 +17,7 @@ Caches (DESIGN.md §6):
 from __future__ import annotations
 
 import math
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +27,91 @@ from repro.configs.base import ArchConfig
 from repro.models.layers import apply_rope, dense_init
 
 NEG_INF = -2.3819763e38  # min bf16-representable-ish; safely below any score
+
+
+class KVView(NamedTuple):
+    """The narrow seam between the serving layer and the model: everything a
+    mixed prefill+decode step needs to know about where its tokens live in
+    the paged KV pools (``docs/serving.md``). A NamedTuple of arrays, so it
+    is a jit-able pytree.
+
+    ``block_tables[b, j]`` is the physical block holding request ``b``'s
+    logical block ``j`` (padding rows/slots carry block 0 — their reads are
+    masked by ``context_lens``). ``positions[b, s]`` is the absolute
+    position of new token ``s`` of row ``b`` (−1 = padding: the token is
+    neither written to the pool nor allowed to produce output).
+    ``context_lens[b]`` counts the KV entries visible to row ``b`` AFTER
+    this step's writes. ``last[b]`` indexes the row's last valid new token
+    (0 for padding rows), where the step reads its logits."""
+
+    block_tables: jnp.ndarray   # (B, MAX_BLOCKS) int32
+    positions: jnp.ndarray      # (B, S_step) int32, −1 = padding
+    context_lens: jnp.ndarray   # (B,) int32
+    last: jnp.ndarray           # (B,) int32
+
+
+def init_kv_pool(cfg: ArchConfig, num_blocks: int, block_size: int, dtype):
+    """One layer's paged KV pool: ``num_blocks`` fixed-size blocks shared by
+    every request (vs. the dense per-request ``(B, s_max)`` buffers)."""
+    Hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((num_blocks, block_size, Hkv, dh), dtype),
+        "v": jnp.zeros((num_blocks, block_size, Hkv, dh), dtype),
+    }
+
+
+def paged_update(kp, vp, k_new, v_new, block_tables, positions):
+    """Scatter this step's K/V into the pools through the block tables.
+
+    kp/vp: (NB, BS, Hkv, dh); k_new/v_new: (B, S, Hkv, dh); positions:
+    (B, S) absolute (−1 = padding → routed out of range and dropped).
+    Distinct requests own distinct blocks and prefix-shared blocks are never
+    written (reuse is capped below the first fed position), so scatter
+    indices never collide."""
+    NB, BS = kp.shape[0], kp.shape[1]
+    pos = jnp.maximum(positions, 0)
+    blk = jnp.take_along_axis(block_tables, pos // BS, axis=1)
+    flat = jnp.where(positions >= 0, blk * BS + pos % BS, NB * BS)
+    flat = flat.reshape(-1)
+    tail = kp.shape[2:]
+    kp = kp.reshape(NB * BS, *tail).at[flat].set(
+        k_new.reshape(-1, *tail), mode="drop").reshape(NB, BS, *tail)
+    vp = vp.reshape(NB * BS, *tail).at[flat].set(
+        v_new.reshape(-1, *tail), mode="drop").reshape(NB, BS, *tail)
+    return kp, vp
+
+
+def paged_lookup(kp, vp, block_tables, context_lens):
+    """Gather each row's KV context from the pools: returns
+    (k, v, kv_positions) with k/v: (B, MAXB·BS, Hkv, dh) and kv_positions
+    (B, MAXB·BS) absolute (−1 = beyond the row's context → masked with an
+    exact-zero softmax weight, so ragged contexts stay bit-exact)."""
+    B, MAXB = block_tables.shape
+    NB, BS = kp.shape[0], kp.shape[1]
+    k = kp[block_tables].reshape(B, MAXB * BS, *kp.shape[2:])
+    v = vp[block_tables].reshape(B, MAXB * BS, *vp.shape[2:])
+    base = jnp.arange(MAXB * BS)[None, :]
+    kv_pos = jnp.where(base < context_lens[:, None], base, -1)
+    return k, v, kv_pos
+
+
+def attention_paged(params, x, pool, view: KVView, cfg: ArchConfig, *,
+                    window: int = 0):
+    """One mixed prefill/decode step against a paged pool: project the new
+    tokens, write them through the block tables, attend over each row's
+    gathered context. x: (B, S_step, d). Returns (out, new_pool)."""
+    B, S, _ = x.shape
+    dtype = x.dtype
+    pos = jnp.maximum(view.positions, 0)
+    q, k, v = _project_qkv(params, x, cfg, pos, dtype)
+    kp, vp = paged_update(pool["k"], pool["v"], k, v, view.block_tables,
+                          view.positions)
+    kk, vv, kv_pos = paged_lookup(kp, vp, view.block_tables,
+                                  view.context_lens)
+    o = attention_core(q, kk, vv, q_positions=view.positions,
+                       kv_positions=kv_pos, causal=True, window=window)
+    out = o.reshape(B, S, -1) @ params["wo"].astype(dtype)
+    return out, {"k": kp, "v": vp}
 
 
 # ---------------------------------------------------------------------------

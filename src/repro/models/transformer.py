@@ -236,6 +236,55 @@ def block_decode(kind, params, x, cache, idx, cfg, rt: Runtime):
     return x, cache
 
 
+def block_step(kind, params, x, pool, view, cfg, rt: Runtime):
+    """Pre-norm residual block for one mixed prefill/decode serving step
+    against a paged KV pool (:class:`repro.models.attention.KVView` is the
+    seam). Plain-math fallback of the period-level graph path in
+    :func:`_blocks_step`. Returns (x, new_pool)."""
+    window = cfg.window if kind == "swa" else 0
+    h = apply_norm(cfg.norm, params["norm1"], x)
+    mixed, pool = attn.attention_paged(params["mixer"], h, pool, view, cfg,
+                                       window=window)
+    x = x + mixed
+    if _has_ffn(cfg):
+        h = apply_norm(cfg.norm, params["norm2"], x)
+        out, _ = ffn_mod.ffn_forward(params["ffn"], h, cfg)
+        x = x + out
+    x = sharding.shard(x, sharding.BATCH_AXES, None, None)
+    return x, pool
+
+
+def _blocks_step(kinds, params_seq, x, pools_seq, view, cfg: ArchConfig,
+                 rt: Runtime):
+    """Run consecutive blocks of a serving step. When every block is
+    whole-block TP-applicable the period executes as ONE dataflow graph in
+    one ``shard_map`` (:func:`repro.core.tp.sp_serve_period`): the KV pools
+    and block tables ride through the graph as extra inputs/outputs of the
+    attention ``custom`` node, the out-projection/FFN reductions fuse to
+    backend-dispatched ``gemm_ar`` (pass 1 — the decode/ragged TP schedule,
+    S=1 and S % tp ≠ 0 alike), and ``TPConfig(planner="perfsim")`` plans the
+    mixed-batch period graph. Pools are unbatched shared state, so the graph
+    path additionally requires dp == 1 (no data axis to diverge replicas
+    over); otherwise falls back per block."""
+    from repro.core import tp as tp_mod
+
+    tpc = _tp_context(rt)
+    if (tpc is not None and len(params_seq) > 0 and cfg.moe is None
+            and all(k in ("attn", "swa") for k in kinds)
+            and all(_whole_block_applicable(cfg, k, tpc.tp) for k in kinds)
+            and sharding.dp_size(tpc.mesh) <= 1):
+        x, pools = tp_mod.sp_serve_period(tpc, x, params_seq, cfg, kinds,
+                                          pools_seq, view,
+                                          norm_kind=cfg.norm)
+        x = sharding.shard(x, sharding.BATCH_AXES, None, None)
+        return x, pools
+    new_pools = []
+    for kind, p, pl in zip(kinds, params_seq, pools_seq):
+        x, pl = block_step(kind, p, x, pl, view, cfg, rt)
+        new_pools.append(pl)
+    return x, new_pools
+
+
 def init_block_cache(kind, cfg: ArchConfig, batch: int, s_max: int, dtype):
     if kind == "attn":
         return attn.init_dense_cache(cfg, batch, s_max, dtype)
@@ -389,6 +438,77 @@ def stack_decode(params, x, caches, idx, cfg: ArchConfig, rt: Runtime):
         x, nc = block_decode(kind, p, x, c, idx, cfg, rt)
         new_caches["rem"].append(nc)
     return x, new_caches
+
+
+def stack_step(params, x, pools, view, cfg: ArchConfig, rt: Runtime):
+    """One mixed prefill/decode serving step through the whole stack: the
+    paged analogue of :func:`stack_decode`, scanning period pools alongside
+    period params. Supported mixers: attn/swa (gated by the engine)."""
+    pattern, P, n_full, rem = _pattern_split(cfg)
+
+    def period_step(x, slices):
+        pslice, plslice = slices
+        x, outs = _blocks_step(pattern, [pslice[f"b{i}"] for i in range(P)],
+                               x, [plslice[f"b{i}"] for i in range(P)],
+                               view, cfg, rt)
+        return x, {f"b{i}": outs[i] for i in range(P)}
+
+    new_pools: Params = {"periods": {}, "rem": []}
+    if n_full:
+        x, new_pools["periods"] = jax.lax.scan(
+            period_step, x, (params["periods"], pools["periods"]))
+    if rem:
+        x, outs = _blocks_step(rem, params["rem"], x, pools["rem"], view,
+                               cfg, rt)
+        new_pools["rem"] = list(outs)
+    return x, new_pools
+
+
+def init_stack_pools(cfg: ArchConfig, num_blocks: int, block_size: int,
+                     dtype):
+    """Paged KV pools for the whole stack, laid out like the stack cache
+    (stacked over full periods + an unrolled remainder) so the serving scan
+    carries them alongside params."""
+    pattern, P, n_full, rem = _pattern_split(cfg)
+    pools: Params = {"periods": {}, "rem": []}
+    for i, kind in enumerate(pattern):
+        if n_full:
+            one = attn.init_kv_pool(cfg, num_blocks, block_size, dtype)
+            pools["periods"][f"b{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_full,) + a.shape), one)
+    for kind in rem:
+        pools["rem"].append(attn.init_kv_pool(cfg, num_blocks, block_size,
+                                              dtype))
+    return pools
+
+
+def pool_pspec(cfg: ArchConfig):
+    """PartitionSpec entries for one (num_blocks, block_size, Hkv, dh) pool:
+    KV heads shard over the model axis when divisible, else replicate (the
+    GQA replicated-KV layout — every device computes the full K/V
+    deterministically, so replicas stay consistent)."""
+    mesh = sharding.current_mesh()
+    tp = sharding.axis_size(mesh, sharding.MODEL_AXIS) if mesh else 1
+    head = sharding.MODEL_AXIS if tp > 1 and cfg.num_kv_heads % tp == 0 \
+        else None
+    return (None, None, head, None)
+
+
+def shard_stack_pools(pools, cfg: ArchConfig):
+    """Apply sharding constraints to a stack-pools pytree."""
+    spec = pool_pspec(cfg)
+
+    def do(tree, stacked):
+        return {name: sharding.shard(leaf, *((None,) if stacked else ())
+                                     + spec)
+                for name, leaf in tree.items()}
+
+    out: Params = {"periods": {}, "rem": []}
+    for name, tree in pools["periods"].items():
+        out["periods"][name] = do(tree, True)
+    for tree in pools["rem"]:
+        out["rem"].append(do(tree, False))
+    return out
 
 
 def init_stack_cache(cfg: ArchConfig, batch: int, s_max: int, dtype):
@@ -554,3 +674,23 @@ class LM:
 
     def init_cache(self, batch: int, s_max: int):
         return init_stack_cache(self.cfg, batch, s_max, self.rt.dtype)
+
+    # ----- paged serving (docs/serving.md) -----
+    def init_pools(self, num_blocks: int, block_size: int):
+        return init_stack_pools(self.cfg, num_blocks, block_size,
+                                self.rt.dtype)
+
+    def serve_step(self, params, tokens, pools, view):
+        """One mixed prefill/decode step against paged KV pools.
+        tokens: (B, S_step) int32 (0 at padding positions); ``view`` is the
+        :class:`repro.models.attention.KVView` seam. Returns (per-row logits
+        at each row's last valid position, (B, 1, V), and the new pools)."""
+        dtype = self.rt.dtype
+        x = self._embed(params, tokens, dtype)
+        x, pools = stack_step(params["stack"], x, pools, view, self.cfg,
+                              self.rt)
+        B = x.shape[0]
+        x_last = x[jnp.arange(B), view.last][:, None, :]
+        x_last = apply_norm(self.cfg.norm, params["final_norm"], x_last)
+        pools = shard_stack_pools(pools, self.cfg)
+        return self.logits(params, x_last), pools

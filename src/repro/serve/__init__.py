@@ -1,3 +1,10 @@
-from repro.serve.engine import Engine, Request, ServeConfig
+from repro.serve.engine import (DenseEngine, Engine, Request, ServeConfig,
+                                paged_supported)
+from repro.serve.kv import BlockAllocator, KVView, blocks_needed
+from repro.serve.loadgen import (LoadSpec, format_report, generate,
+                                 latency_report)
+from repro.serve.scheduler import Row, Scheduler
 
-__all__ = ["Engine", "Request", "ServeConfig"]
+__all__ = ["BlockAllocator", "DenseEngine", "Engine", "KVView", "LoadSpec",
+           "Request", "Row", "Scheduler", "ServeConfig", "blocks_needed",
+           "format_report", "generate", "latency_report", "paged_supported"]

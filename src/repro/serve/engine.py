@@ -1,13 +1,32 @@
-"""Batched serving engine: continuous-batching-lite over prefill/decode steps.
+"""Serving engines: paged-KV continuous batching (``Engine``) and the
+static-batch dense-KV reference (``DenseEngine``).
 
-Requests enter a queue; the engine packs up to `max_batch` requests, runs one
-shared prefill (left-padded to the longest prompt via position masking), then
-steps decode for all active sequences, retiring finished ones and (greedy or
-temperature) sampling. All compute goes through the model's jit'd
-prefill/decode steps — the same ones the dry-run lowers.
+``Engine`` is the production path (docs/serving.md): a
+:class:`repro.serve.kv.BlockAllocator` owns fixed-size KV blocks with
+prefix reuse, a :class:`repro.serve.scheduler.Scheduler` builds one mixed
+prefill+decode batch per iteration (chunked prefill interleaved with
+decode under a token budget), and every iteration runs ONE jitted
+``LM.serve_step`` — under TP that is the ``sp_serve_period`` graph, where
+chunked-prefill rows (S % tp ≠ 0) and S=1 decode rows alike keep tensor
+parallelism through backend-dispatched ``gemm_ar``. Batches are padded to
+(``max_batch``, S-bucket) so the engine compiles exactly two step shapes
+(decode-only S=1, mixed S=``prefill_chunk``).
+
+``DenseEngine`` is the pre-paging engine kept as the parity/bench
+reference: dense ``(B, s_max)`` KV caches, one static batch per
+same-length group, no admission between steps. Greedy decoding is pinned
+token-for-token identical between the two (tests/test_serve.py).
+
+Sampling is replayable: ``run(requests, key=None)`` resolves a seed
+(recorded on every request), and each sampled token uses
+``fold_in(fold_in(key(seed), rid), token_index)`` — independent of batch
+composition and scheduling order, so a load-gen run replays exactly.
+Archs the paged path cannot serve (ssm/rglru/mla mixers, enc-dec,
+prefix-token VLMs) transparently fall back to the dense engine.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -18,7 +37,10 @@ import numpy as np
 from repro import sharding
 from repro.configs.base import ArchConfig
 from repro.core.backends import get_backend
+from repro.models.attention import KVView
 from repro.runtime import Runtime
+from repro.serve.kv import BlockAllocator, blocks_needed
+from repro.serve.scheduler import Row, Scheduler
 
 
 @dataclass
@@ -29,30 +51,194 @@ class Request:
     temperature: float = 0.0
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    # load-gen / metrics surface (seconds, relative to run start)
+    arrival_time: float = 0.0
+    t_first_token: Optional[float] = None
+    token_times: List[float] = field(default_factory=list)
+    seed: Optional[int] = None          # sampling seed recorded by run()
 
 
-@dataclass
+@dataclass(frozen=True)
 class ServeConfig:
+    """Frozen so a config can never become cross-engine shared mutable
+    state (the old mutable default bug). 0 means "derive a default"."""
     max_batch: int = 8
     s_max: int = 256
+    block_size: int = 8                 # KV tokens per pool block
+    num_blocks: int = 0                 # 0: max_active tables + slack
+    prefill_chunk: int = 8              # prompt tokens per prefill row
+    token_budget: int = 0               # 0: max_batch * prefill_chunk
+    max_active: int = 0                 # 0: max_batch
+    prefix_cache: bool = True
+
+
+def _resolve_seed(key) -> int:
+    if key is None:
+        return 0
+    if isinstance(key, (int, np.integer)):
+        return int(key)
+    return int(np.asarray(jax.random.key_data(key)).ravel()[-1])
+
+
+def _sample_token(logits_row: np.ndarray, seed: int, rid: int,
+                  token_index: int, temperature: float) -> int:
+    """One token from one row's logits. Greedy at temperature 0; otherwise
+    the key depends only on (seed, rid, token_index) — replayable no matter
+    how requests were batched or scheduled."""
+    if temperature <= 0.0:
+        return int(np.argmax(logits_row))
+    k = jax.random.fold_in(jax.random.fold_in(jax.random.key(seed), rid),
+                           token_index)
+    return int(jax.random.categorical(
+        k, jnp.asarray(logits_row) / temperature))
+
+
+def paged_supported(model, cfg: Optional[ArchConfig],
+                    extras: Optional[Dict[str, Any]] = None) -> bool:
+    """Can this (model, arch) serve through the paged path? Requires
+    attention-only mixers (paged pools hold K/V blocks; ssm/rglru/mla carry
+    other state), a decoder-only LM (``serve_step``), and no prefix/extras
+    inputs (enc-dec cross-attention, VLM patch embeddings)."""
+    if cfg is None or extras:
+        return False
+    if not hasattr(model, "serve_step"):
+        return False
+    if getattr(cfg, "is_enc_dec", False) or cfg.num_prefix_tokens:
+        return False
+    return all(k in ("attn", "swa") for k in cfg.layer_kinds())
 
 
 class Engine:
+    """Paged-KV continuous-batching engine (falls back to
+    :class:`DenseEngine` for archs outside the paged path)."""
+
     def __init__(self, model, params, cfg: ArchConfig, rt: Runtime,
-                 serve_cfg: ServeConfig = ServeConfig(), mesh=None,
+                 serve_cfg: Optional[ServeConfig] = None, mesh=None,
                  extras: Optional[Dict[str, Any]] = None):
         self.model = model
         self.params = params
         self.cfg = cfg
         self.rt = rt
         # resolve the collective backend up front: an unknown tp.mode fails
-        # at engine construction, not deep inside the first jitted prefill
+        # at engine construction, not deep inside the first jitted step
         self.backend = get_backend(rt.tp.mode)
-        self.sc = serve_cfg
+        self.sc = serve_cfg if serve_cfg is not None else ServeConfig()
         self.mesh = mesh
         self.extras = extras or {}
+        self.last_report: Dict[str, float] = {}
+        self._paged = paged_supported(model, cfg, self.extras)
+        self._dense: Optional[DenseEngine] = None
+        if self._paged:
+            sc = self.sc
+            self.max_active = sc.max_active or sc.max_batch
+            self.table_width = max(-(-sc.s_max // sc.block_size), 1)
+            self.num_blocks = sc.num_blocks or (
+                self.max_active * self.table_width + self.table_width)
+            self.token_budget = sc.token_budget or (
+                sc.max_batch * sc.prefill_chunk)
+            self._step = jax.jit(model.serve_step)
+        else:
+            self._dense = DenseEngine(model, params, cfg, rt, self.sc,
+                                      mesh=mesh, extras=self.extras)
+
+    # ----- batching -----
+    def _assemble(self, rows: List[Row], s_pad: int):
+        B = self.sc.max_batch
+        toks = np.zeros((B, s_pad), np.int32)
+        pos = np.full((B, s_pad), -1, np.int32)   # -1: no KV write, masked q
+        bt = np.zeros((B, self.table_width), np.int32)
+        ctx = np.zeros((B,), np.int32)            # 0: padding row, all masked
+        last = np.zeros((B,), np.int32)
+        for i, row in enumerate(rows):
+            s = len(row.tokens)
+            toks[i, :s] = row.tokens
+            pos[i, :s] = row.positions
+            bt[i, :len(row.block_table)] = row.block_table
+            ctx[i] = row.context_len
+            last[i] = s - 1
+        view = KVView(block_tables=jnp.asarray(bt),
+                      positions=jnp.asarray(pos),
+                      context_lens=jnp.asarray(ctx),
+                      last=jnp.asarray(last))
+        return jnp.asarray(toks), view
+
+    # ----- main loop -----
+    def run(self, requests: List[Request], key=None) -> List[Request]:
+        if not self._paged:
+            return self._dense.run(requests, key=key)
+        seed = _resolve_seed(key)
+        sc = self.sc
+        for r in requests:
+            r.seed = seed
+            need = blocks_needed(len(r.prompt), r.max_new_tokens,
+                                 sc.block_size)
+            if need > self.table_width:
+                raise ValueError(
+                    f"request {r.rid}: prompt+max_new needs {need} blocks, "
+                    f"table holds {self.table_width} (raise s_max)")
+        alloc = BlockAllocator(self.num_blocks, sc.block_size,
+                               prefix_cache=sc.prefix_cache)
+        sched = Scheduler(alloc, max_batch=sc.max_batch,
+                          prefill_chunk=sc.prefill_chunk,
+                          token_budget=self.token_budget,
+                          max_active=self.max_active)
+        sched.submit(requests)
+        with sharding.use_mesh(self.mesh):
+            pools = self.model.init_pools(self.num_blocks, sc.block_size)
+            t0 = time.monotonic()
+            while sched.has_work():
+                now = time.monotonic() - t0
+                sched.admit(now)
+                rows = sched.next_batch()
+                if not rows:
+                    nxt = min(r.arrival_time for r in sched.waiting)
+                    time.sleep(min(max(nxt - now, 0.0), 0.05) + 1e-4)
+                    continue
+                s_pad = 1 if all(not r.is_prefill for r in rows) \
+                    else sc.prefill_chunk
+                toks, view = self._assemble(rows, s_pad)
+                logits, pools = self._step(self.params, toks, pools, view)
+                logits = np.asarray(logits[:, 0])
+                t_now = time.monotonic() - t0
+                for i, row in enumerate(rows):
+                    if not row.sample:
+                        sched.advance(row.rid, len(row.tokens), None)
+                        continue
+                    req = next(r for r in requests if r.rid == row.rid)
+                    tok = _sample_token(logits[i], seed, row.rid,
+                                        row.token_index, req.temperature)
+                    if req.t_first_token is None:
+                        req.t_first_token = t_now
+                    req.token_times.append(t_now)
+                    sched.advance(row.rid, len(row.tokens), tok)
+        makespan = time.monotonic() - t0
+        from repro.serve.loadgen import latency_report
+        self.last_report = latency_report(
+            requests, makespan, n_devices=jax.device_count(),
+            kv_utilization=alloc.peak_used / alloc.num_blocks, seed=seed)
+        self.last_report["prefix_hits"] = float(alloc.prefix_hits)
+        return requests
+
+
+class DenseEngine:
+    """The pre-paging static-batch engine: dense ``(B, s_max)`` KV caches,
+    one batch per same-length prompt group, kept as the greedy-parity and
+    makespan baseline for the paged engine."""
+
+    def __init__(self, model, params, cfg: ArchConfig, rt: Runtime,
+                 serve_cfg: Optional[ServeConfig] = None, mesh=None,
+                 extras: Optional[Dict[str, Any]] = None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.rt = rt
+        self.backend = get_backend(rt.tp.mode)
+        self.sc = serve_cfg if serve_cfg is not None else ServeConfig()
+        self.mesh = mesh
+        self.extras = extras or {}
+        self.last_report: Dict[str, float] = {}
         self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, s_max=serve_cfg.s_max))
+            lambda p, b: model.prefill(p, b, s_max=self.sc.s_max))
         self._decode = jax.jit(model.decode_step)
 
     def _pack(self, requests: List[Request]):
@@ -68,47 +254,62 @@ class Engine:
         return jnp.asarray(toks), jnp.asarray(lens), S
 
     def run(self, requests: List[Request], key=None) -> List[Request]:
-        key = key if key is not None else jax.random.key(0)
+        seed = _resolve_seed(key)
+        for r in requests:
+            r.seed = seed
         # group by prompt length: one prefill per group keeps positions exact
-        # (no pad tokens leak into the KV cache)
+        # (no pad tokens leak into the KV cache). A static batch cannot start
+        # until every member has arrived — the cost continuous batching
+        # removes.
         by_len: Dict[int, List[Request]] = {}
         for r in requests:
             by_len.setdefault(len(r.prompt), []).append(r)
+        t0 = time.monotonic()
         with sharding.use_mesh(self.mesh):
             for _, group in sorted(by_len.items()):
                 for i in range(0, len(group), self.sc.max_batch):
                     chunk = group[i:i + self.sc.max_batch]
-                    key, sub = jax.random.split(key)
-                    self._run_batch(chunk, sub)
+                    wait = max(r.arrival_time for r in chunk) \
+                        - (time.monotonic() - t0)
+                    if wait > 0:
+                        time.sleep(wait)
+                    self._run_batch(chunk, seed, t0)
+        makespan = time.monotonic() - t0
+        from repro.serve.loadgen import latency_report
+        self.last_report = latency_report(requests, makespan,
+                                          n_devices=jax.device_count(),
+                                          seed=seed)
         return requests
 
-    def _run_batch(self, requests: List[Request], key):
+    def _run_batch(self, requests: List[Request], seed: int, t0: float):
         toks, lens, S = self._pack(requests)
         batch = {"tokens": toks, **self.extras}
         logits, caches = self._prefill(self.params, batch)
         prefix = self.cfg.num_prefix_tokens
         idx = jnp.full((len(requests),), S + prefix, jnp.int32)
-        tok = self._sample(logits[:, -1], requests, key)
+        tok = self._sample(logits[:, -1], requests, seed)
 
         max_new = max(r.max_new_tokens for r in requests)
         for t in range(max_new):
+            t_now = time.monotonic() - t0
             for i, r in enumerate(requests):
                 if not r.done and len(r.out_tokens) < r.max_new_tokens:
                     r.out_tokens.append(int(tok[i, 0]))
+                    if r.t_first_token is None:
+                        r.t_first_token = t_now
+                    r.token_times.append(t_now)
                     if len(r.out_tokens) >= r.max_new_tokens:
                         r.done = True
             if all(r.done for r in requests):
                 break
-            key, sub = jax.random.split(key)
             logits, caches = self._decode(self.params, tok, caches, idx + t)
-            tok = self._sample(logits[:, -1], requests, sub)
+            tok = self._sample(logits[:, -1], requests, seed)
         for r in requests:
             r.done = True
 
-    def _sample(self, logits, requests: List[Request], key):
-        greedy = jnp.argmax(logits, -1)
-        temp = jnp.asarray([max(r.temperature, 1e-6) for r in requests])
-        sampled = jax.random.categorical(key, logits / temp[:, None], -1)
-        use_greedy = jnp.asarray([r.temperature == 0.0 for r in requests])
-        out = jnp.where(use_greedy, greedy, sampled)
-        return out.astype(jnp.int32)[:, None]
+    def _sample(self, logits, requests: List[Request], seed: int):
+        rows = np.asarray(logits)
+        out = [_sample_token(rows[i], seed, r.rid, len(r.out_tokens),
+                             r.temperature)
+               for i, r in enumerate(requests)]
+        return jnp.asarray(out, jnp.int32)[:, None]

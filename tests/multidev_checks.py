@@ -470,6 +470,76 @@ def main():
     check("decode.ragged_s_moe_runs",
           0.0 if out_rm.shape == x3.shape else 1.0)
 
+    # ---------------- serving: paged KV through the serve-period graph ----
+    # S=1 decode rows and chunked-prefill rows with S % tp != 0 must BOTH
+    # keep TP via backend-dispatched gemm_ar (never silently unshard), and a
+    # mixed prefill+decode batch must match the same rows run in
+    # single-mode batches.
+    from repro.models.attention import KVView
+
+    mesh14 = sharding.make_mesh((1, 4), ("data", "model"))
+    cfg_srv = get_arch("deepseek-7b").smoke().scaled(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+        d_ff=128)
+    params_srv = None
+
+    def serve_views():
+        bt = jnp.asarray([[0, 1], [2, 3]], jnp.int32)
+        pad = -jnp.ones((1, 5), jnp.int32)
+        v_pre_a = KVView(bt, jnp.concatenate(
+            [jnp.arange(5, dtype=jnp.int32)[None, :], pad]),
+            jnp.asarray([5, 0], jnp.int32), jnp.asarray([4, 0], jnp.int32))
+        v_dec = KVView(bt, jnp.asarray([[5], [-1]], jnp.int32),
+                       jnp.asarray([6, 0], jnp.int32),
+                       jnp.asarray([0, 0], jnp.int32))
+        v_pre_b = KVView(bt, jnp.asarray([[-1] * 3, [0, 1, 2]], jnp.int32),
+                         jnp.asarray([0, 3], jnp.int32),
+                         jnp.asarray([0, 2], jnp.int32))
+        v_mix = KVView(bt, jnp.asarray([[5, -1, -1], [0, 1, 2]], jnp.int32),
+                       jnp.asarray([6, 3], jnp.int32),
+                       jnp.asarray([0, 2], jnp.int32))
+        return v_pre_a, v_dec, v_pre_b, v_mix
+
+    t_pre_a = jnp.asarray([[1, 2, 3, 4, 5], [0] * 5], jnp.int32)
+    t_dec = jnp.asarray([[7], [0]], jnp.int32)
+    t_pre_b = jnp.asarray([[0] * 3, [9, 8, 7]], jnp.int32)
+    t_mix = jnp.asarray([[7, 0, 0], [9, 8, 7]], jnp.int32)
+
+    def serve_logits(mode):
+        nonlocal params_srv
+        rt_s = Runtime(compute_dtype="float32", remat=False, loss_chunk=16,
+                       tp=TPConfig(mode=mode, chunks=2))
+        m = build_model(cfg_srv, rt_s)
+        if params_srv is None:
+            params_srv = m.init(jax.random.key(31))
+        v_pre_a, v_dec, v_pre_b, v_mix = serve_views()
+        with sharding.use_mesh(mesh14):
+            pools = m.init_pools(8, 4)
+            _, pools = m.serve_step(params_srv, t_pre_a, pools, v_pre_a)
+            lg_dec, _ = m.serve_step(params_srv, t_dec, pools, v_dec)
+            lg_pre, _ = m.serve_step(params_srv, t_pre_b, pools, v_pre_b)
+            lg_mix, _ = m.serve_step(params_srv, t_mix, pools, v_mix)
+        return lg_dec, lg_pre, lg_mix
+
+    for mode in ("barrier", "cais"):
+        lg_dec, lg_pre, lg_mix = serve_logits(mode)
+        err = max(float(jnp.abs(lg_mix[0] - lg_dec[0]).max()),
+                  float(jnp.abs(lg_mix[1] - lg_pre[1]).max()))
+        check(f"serve.mixed_vs_single.{mode}", err, 1e-6)
+
+    ar_calls["n"] = 0
+    register_backend(CountingCAIS())
+    try:
+        serve_logits("cais-count")
+        # stack_step scans over periods, so the period graph traces ONCE
+        # per serve_step shape: 2 gemm_ar dispatches (attention out-proj +
+        # FFN down-proj) each for the S=5 prefill, the S=1 decode and the
+        # S=3 chunk/mixed steps (the two S=3 steps may share a trace)
+        check("serve.backend_dispatch_gemm_ar",
+              0.0 if ar_calls["n"] >= 6 else 1.0)
+    finally:
+        unregister_backend("cais-count")
+
     # ---------------- full model: auto == barrier == cais ----------------
     mesh2 = sharding.make_mesh((2, 4), ("data", "model"))
     cfg = get_arch("deepseek-7b").smoke().scaled(

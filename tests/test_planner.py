@@ -15,7 +15,7 @@ from repro.plan import (CalibrationResult, PerfsimPlanner, PlanCache,
 FABRIC = Fabric(n=8)
 
 BENCH_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
-                          "BENCH_pr7.json")
+                          "BENCH_pr8.json")
 
 
 def _pass2(g):
