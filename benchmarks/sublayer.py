@@ -13,7 +13,7 @@ graph-built backward (``TPConfig.graph_backward`` — the ``sp_period``
 custom VJP, docs/training.md) against plain JAX autodiff of the executed
 forward. With ``$REPRO_BENCH_JSON`` set, every row (including the
 subprocess cells) is dumped as the JSON baseline the CI slow-suite
-commits as ``BENCH_pr8.json`` — a ``meta.sublayer_env`` row records the shapes/mode
+commits as ``BENCH_pr9.json`` — a ``meta.sublayer_env`` row records the shapes/mode
 so baselines regenerated under different settings are not silently
 compared. Measured cells run on CPU-emulated virtual devices, where
 ``collective_permute`` chains serialize (no real bidirectional links), so
@@ -139,6 +139,39 @@ def _block_child() -> None:
                          x, params2)
         emit(f"train_step.graph_vs_autodiff.{mode}", t_graph,
              f"autodiff_us={t_auto:.0f} speedup={t_auto / t_graph:.2f}x")
+
+        # hierarchical 2D-mesh TP (docs/topology.md): the same 1-block graph
+        # on a tp_in × tp_out = 2 × 4 mesh (per-axis collective composition)
+        # vs the flat 8-ring. The barrier row feeds the inter-tier
+        # (bw2, alpha2) calibration fit (repro.plan.calibrate.TOPO_CELLS).
+        tpc2d = tp_mod.TPContext(mesh=sharding.make_tp_mesh(2, 4),
+                                 backend=mode, cais=CAISConfig(num_chunks=2))
+        fused2d = jax.jit(
+            lambda x, tpc=tpc2d: tp_mod.sp_block(tpc, x, params, cfg,
+                                                 "attn")[0])
+        t_2d = time_fn(fused2d, x)
+        emit(f"topo.flat_vs_2d.{mode}", t_2d,
+             f"flat_us={t_fused:.0f} ratio={t_2d / t_fused:.2f}x")
+
+    # grouped-EP MoE (E < tp): experts sharded over tp_out only, all-to-all
+    # never crossing tp_in — vs the flat ring's replicated-expert fallback
+    cfg_moe = get_arch("mixtral-8x7b").smoke().scaled(
+        num_layers=1, d_model=d, num_heads=8, num_kv_heads=8,
+        head_dim=d // 8, d_ff=d_ff, window=16)
+    params_moe = tr.init_block(jax.random.key(3), "attn", cfg_moe,
+                               jnp.float32)
+    moe_ts = {}
+    for label, mesh_m in (("grouped_ep", sharding.make_tp_mesh(2, 4)),
+                          ("flat_tp", mesh)):
+        tpc_m = tp_mod.TPContext(mesh=mesh_m, backend="cais",
+                                 cais=CAISConfig(num_chunks=2))
+        fn = jax.jit(lambda x, tpc=tpc_m: tp_mod.sp_moe_ffn(
+            tpc, x, params_moe["norm2"]["scale"], params_moe["ffn"],
+            cfg_moe)[0])
+        moe_ts[label] = time_fn(fn, x)
+    emit("moe.grouped_ep_vs_tp", moe_ts["grouped_ep"],
+         f"flat_us={moe_ts['flat_tp']:.0f} "
+         f"ratio={moe_ts['grouped_ep'] / moe_ts['flat_tp']:.2f}x")
 
 
 def run() -> None:

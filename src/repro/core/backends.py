@@ -101,6 +101,8 @@ class CollectiveBackend:
         (the decode/ragged-S dense schedule works on any backend that
         implements the RS side). Falls back to a monolithic allreduce when
         the sequence cannot scatter over the ring (S % n != 0, e.g. S=1)."""
+        if self.hierarchical(axis):
+            return self.hier_gemm_ar(x, w, axis, cais)
         n = prim._axis_size(axis) if cais.interpret_n is None \
             else cais.interpret_n
         if int(x.shape[1]) % max(n, 1) != 0:
@@ -163,6 +165,8 @@ class CollectiveBackend:
         ``(d @ wT gathered, d gathered)`` — the second output feeds the
         weight-gradient GEMM, so the gather runs once. Default: one
         monolithic all-gather (the barrier schedule)."""
+        if self.hierarchical(axis):
+            return self.hier_grad_ag_gemm(d, wT, axis, cais)
         g = lax.all_gather(d, axis, axis=1, tiled=True)
         return g @ wT, g
 
@@ -173,6 +177,91 @@ class CollectiveBackend:
         tuple (paired ``ag_gemm_multi``). Returns (rs_out, ag_out[s])."""
         raise NotImplementedError
 
+    # -- hierarchical (2D-mesh) compositions ------------------------------
+    # ``axis`` may be the composite ``("tp_in", "tp_out")`` tuple from
+    # ``sharding.tp_axes`` (tp_in MAJOR in the flattened shard order, so the
+    # slow axis's shard index is minor). Concrete methods dispatch here for
+    # tuple axes; the compositions run the inter-node legs through the
+    # ``_outer_*`` hooks (monolithic by default, ring-decomposed with
+    # inter-tier chunk planning on cais) and reuse the backend's OWN fused
+    # schedules on the fast intra-node ring — custom backends become
+    # 2D-capable without new code. docs/topology.md derives the orderings:
+    # AG gathers inter-node first (minor index → contiguous intra blocks),
+    # RS scatters intra-node first.
+
+    @staticmethod
+    def hierarchical(axis) -> bool:
+        """True when ``axis`` is a composite (2D-mesh) axis tuple."""
+        return isinstance(axis, (tuple, list)) and len(axis) > 1
+
+    def _inner_all_gather(self, x, axis: str, cais: CAISConfig):
+        """Intra-node all-gather leg (dim 1) of hierarchical AR."""
+        return lax.all_gather(x, axis, axis=1, tiled=True)
+
+    def _outer_all_gather(self, x, axis: str, cais: CAISConfig):
+        """Inter-node all-gather leg (dim 1)."""
+        return lax.all_gather(x, axis, axis=1, tiled=True)
+
+    def _outer_reduce_scatter(self, x, axis: str, cais: CAISConfig):
+        """Inter-node reduce-scatter leg (dim 1)."""
+        return lax.psum_scatter(x, axis, scatter_dimension=1, tiled=True)
+
+    def hier_ag_gemm_multi(self, x, ws, axis, cais: CAISConfig):
+        """AG→GEMM on the composite axis: gather the slow inter-node axis
+        first (its shard index is minor, so the concat yields this node's
+        contiguous block), then the backend's fused schedule on tp_in."""
+        xg = self._outer_all_gather(x, axis[-1], cais)
+        return self.ag_gemm_multi(xg, tuple(ws), axis[0], cais)
+
+    def hier_gemm_rs(self, x, w, axis, cais: CAISConfig):
+        """GEMM→RS on the composite axis: the backend's fused intra-node
+        reduce-scatter first (tp_in-major shard order), then the inter-node
+        exchange on 1/tp_in of the payload."""
+        y = self.gemm_rs(x, w, axis[0], cais)
+        return self._outer_reduce_scatter(y, axis[-1], cais)
+
+    def hier_gemm_ar(self, x, w, axis, cais: CAISConfig):
+        """GEMM→AR: intra-node reduce-scatter → inter-node exchange →
+        all-gather back out through both tiers (the classic hierarchical
+        AR). Ragged sequences that cannot scatter over the full composite
+        ring fall back to the monolithic allreduce — ``lax.psum`` takes the
+        axis tuple directly."""
+        axes = tuple(axis)
+        if int(x.shape[1]) % max(prim._axis_size(axes), 1) != 0:
+            return prim.barrier_gemm_ar(x, w, axes)
+        y = self.hier_gemm_rs(x, w, axis, cais)
+        y = self._outer_all_gather(y, axis[-1], cais)
+        return self._inner_all_gather(y, axis[0], cais)
+
+    def hier_a2a_expert_ffn(self, send, ffn: Callable, axis,
+                            cais: CAISConfig):
+        """Grouped-EP expert all-to-all: experts replicate across ``tp_in``
+        and shard over ``tp_out`` only, so the dispatch/combine traffic
+        never crosses the intra-node ring (``send`` is (tp_out, C, d))."""
+        return self.a2a_expert_ffn(send, ffn, axis[-1], cais)
+
+    def hier_grad_ag_gemm(self, d, wT, axis, cais: CAISConfig):
+        """Adjoint gather through both tiers: inter-node first, intra-node
+        second (same ordering as the forward hierarchical AG)."""
+        g = self._outer_all_gather(d, axis[-1], cais)
+        g = self._inner_all_gather(g, axis[0], cais)
+        return g @ wT, g
+
+    def hier_overlap_asymmetric(self, rs_args, ag_args, axis,
+                                cais: CAISConfig):
+        """The lockstep dual-stream schedule is a single-ring construct; on
+        2D meshes the two sides run as their hierarchical compositions (the
+        intra-node legs still overlap under the compiler's scheduler; the
+        inter-node legs serialize)."""
+        x_rs, w_rs = rs_args
+        x_ag, w_ag = ag_args
+        rs_out = self.gemm_rs(x_rs, w_rs, axis, cais)
+        multi = isinstance(w_ag, (tuple, list))
+        ag_out = self.ag_gemm_multi(x_ag,
+                                    tuple(w_ag) if multi else (w_ag,),
+                                    axis, cais)
+        return rs_out, (ag_out if multi else ag_out[0])
+
 
 # ---------------------------------------------------------------------------
 # barrier — monolithic NVLS-style collectives around each GEMM
@@ -180,24 +269,36 @@ class CollectiveBackend:
 
 
 class BarrierBackend(CollectiveBackend):
-    """Communication-centric baseline: opaque collective phases."""
+    """Communication-centric baseline: opaque collective phases. On 2D
+    meshes the AG/RS sides compose hierarchically from monolithic per-axis
+    legs; ``gemm_ar`` stays ONE opaque allreduce (``lax.psum`` accepts the
+    composite axis tuple) — the baseline's defining phase structure."""
 
     name = "barrier"
 
     def ag_gemm_multi(self, x, ws, axis, cais):
+        if self.hierarchical(axis):
+            return self.hier_ag_gemm_multi(x, ws, axis, cais)
         xg = lax.all_gather(x, axis, axis=1, tiled=True)
         return tuple(xg @ w for w in ws)
 
     def gemm_rs(self, x, w, axis, cais):
+        if self.hierarchical(axis):
+            return self.hier_gemm_rs(x, w, axis, cais)
         return prim.barrier_gemm_rs(x, w, axis)
 
     def gemm_ar(self, x, w, axis, cais):
-        return prim.barrier_gemm_ar(x, w, axis)
+        return prim.barrier_gemm_ar(
+            x, w, tuple(axis) if self.hierarchical(axis) else axis)
 
     def a2a_expert_ffn(self, send, ffn, axis, cais):
+        if self.hierarchical(axis):
+            return self.hier_a2a_expert_ffn(send, ffn, axis, cais)
         return prim.barrier_a2a_expert_ffn(send, ffn, axis)
 
     def overlap_asymmetric(self, rs_args, ag_args, axis, cais):
+        if self.hierarchical(axis):
+            return self.hier_overlap_asymmetric(rs_args, ag_args, axis, cais)
         x_rs, w_rs = rs_args
         x_ag, w_ag = ag_args
         rs_out = prim.barrier_gemm_rs(x_rs, w_rs, axis)
@@ -212,11 +313,16 @@ class BarrierBackend(CollectiveBackend):
 
 
 @lru_cache(maxsize=512)
-def _planned_chunks(payload_bytes: int, ring: int, bidirectional: bool) -> int:
-    """coordination.plan() keyed per (payload, ring) — shapes are static under
-    jit so the cache collapses repeated traces to one planner call."""
+def _planned_chunks(payload_bytes: int, ring: int, bidirectional: bool,
+                    hw=None) -> int:
+    """coordination.plan() keyed per (payload, ring, hw) — shapes are static
+    under jit so the cache collapses repeated traces to one planner call.
+    ``hw`` is the α-β tier being planned (None → V5E); hierarchical legs
+    pass the inter-node tier here so the slow axis is never planned against
+    the intra-node bandwidth."""
     return coordination.plan(float(payload_bytes), ring,
-                             bidirectional=bidirectional).num_chunks
+                             bidirectional=bidirectional,
+                             hw=hw or coordination.V5E).num_chunks
 
 
 class CAISBackend(CollectiveBackend):
@@ -228,36 +334,68 @@ class CAISBackend(CollectiveBackend):
 
     @staticmethod
     def plan_chunks(payload_bytes: float, ring: int,
-                    bidirectional: bool = True) -> int:
-        """The chunking the backend would auto-pick for this collective."""
-        return _planned_chunks(int(payload_bytes), ring, bidirectional)
+                    bidirectional: bool = True, hw=None) -> int:
+        """The chunking the backend would auto-pick for this collective
+        (``hw=None`` → V5E; pass ``hw.inter_tier()`` for inter-node legs)."""
+        return _planned_chunks(int(payload_bytes), ring, bidirectional, hw)
 
-    def _ring(self, axis: str, cais: CAISConfig) -> int:
+    def _ring(self, axis, cais: CAISConfig) -> int:
         return cais.interpret_n or prim._axis_size(axis)
 
     def _resolve(self, cais: CAISConfig, gathered_bytes: float,
-                 ring: int) -> CAISConfig:
+                 ring: int, inter: bool = False) -> CAISConfig:
         """Fill in num_chunks from the α-β plan when the config leaves it
         open. ``gathered_bytes`` is the full (global) payload the collective
-        moves around the ring."""
+        moves around the ring; ``inter=True`` plans the leg against the
+        inter-node tier of ``cais.hw`` (the 2D-mesh slow axis)."""
         if cais.num_chunks is not None or ring <= 1:
             return cais
-        c = _planned_chunks(int(gathered_bytes), ring, cais.bidirectional)
+        hw = cais.hw
+        if inter:
+            hw = (hw or coordination.V5E).inter_tier()
+        c = _planned_chunks(int(gathered_bytes), ring, cais.bidirectional, hw)
         return dataclasses.replace(cais, num_chunks=c)
 
     @staticmethod
     def _nbytes(x) -> int:
         return int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
 
+    # inter-node legs of the hierarchical compositions: ring-decomposed,
+    # chunk-planned against the inter-node tier of ``cais.hw``
+    def _inner_all_gather(self, x, axis, cais):
+        return prim.ring_all_gather(x, axis, cais)
+
+    def _outer_all_gather(self, x, axis, cais):
+        ring = prim._axis_size(axis)
+        if ring <= 1:
+            return x
+        cais = self._resolve(cais, self._nbytes(x) * ring, ring, inter=True)
+        return prim.ring_all_gather(x, axis, cais)
+
+    def _outer_reduce_scatter(self, x, axis, cais):
+        ring = prim._axis_size(axis)
+        if ring <= 1:
+            return x
+        if int(x.shape[1]) % ring != 0:
+            return lax.psum_scatter(x, axis, scatter_dimension=1, tiled=True)
+        cais = self._resolve(cais, self._nbytes(x), ring, inter=True)
+        return prim.ring_reduce_scatter(x, axis, cais)
+
     def ag_gemm_multi(self, x, ws, axis, cais):
+        if self.hierarchical(axis):
+            return self.hier_ag_gemm_multi(x, ws, axis, cais)
         n = self._ring(axis, cais)
         cais = self._resolve(cais, self._nbytes(x) * n, n)
         return prim.ag_gemm_multi(x, tuple(ws), axis, cais)
 
     def gemm_rs(self, x, w, axis, cais):
+        if self.hierarchical(axis):
+            return self.hier_gemm_rs(x, w, axis, cais)
         return prim.gemm_rs(x, w, axis, cais)
 
     def gemm_ar(self, x, w, axis, cais):
+        if self.hierarchical(axis):
+            return self.hier_gemm_ar(x, w, axis, cais)
         # the decomposed RS+AG schedule sequence-shards the payload around
         # the ring; a ragged/decode sequence (S % ring != 0, e.g. S=1) can't
         # split, so THIS collective falls back to the monolithic allreduce
@@ -267,10 +405,19 @@ class CAISBackend(CollectiveBackend):
         return prim.gemm_ar(x, w, axis, cais)
 
     def a2a_expert_ffn(self, send, ffn, axis, cais):
+        if self.hierarchical(axis):
+            return self.hier_a2a_expert_ffn(send, ffn, axis, cais)
         return prim.a2a_expert_ffn(send, ffn, axis, cais)
 
     def fused_rs_ln_ag(self, x, w1, ln_scale, w2, axis, cais,
                        norm="rmsnorm", residual=None):
+        if self.hierarchical(axis):
+            # base composition over this backend's guarded gemm_rs /
+            # ag_gemm_multi — each tier plans its own leg inside those
+            outs, z = super().fused_rs_ln_ag_multi(
+                x, w1, ln_scale, (w2,), axis, cais, norm=norm,
+                residual=residual)
+            return outs[0], z
         # plan for the AG leg: the gathered z payload is (B, S, d) where
         # S = x.shape[1] (x is full-sequence, feature-sharded) and d = w1 cols
         n = self._ring(axis, cais)
@@ -283,6 +430,10 @@ class CAISBackend(CollectiveBackend):
 
     def fused_rs_ln_ag_multi(self, x, w1, ln_scale, ws2, axis, cais,
                              norm="rmsnorm", residual=None):
+        if self.hierarchical(axis):
+            return super().fused_rs_ln_ag_multi(x, w1, ln_scale, tuple(ws2),
+                                                axis, cais, norm=norm,
+                                                residual=residual)
         # same planning as fused_rs_ln_ag — the gathered z payload governs
         # both legs; with num_chunks resolved, the base-class composition
         # over this backend's gemm_rs / ag_gemm_multi is the schedule
@@ -297,6 +448,9 @@ class CAISBackend(CollectiveBackend):
 
     def fused_rs_ln(self, x, w1, ln_scale, axis, cais,
                     norm="rmsnorm", residual=None):
+        if self.hierarchical(axis):
+            return super().fused_rs_ln(x, w1, ln_scale, axis, cais,
+                                       norm=norm, residual=residual)
         # plan for the RS leg like fused_rs_ln_ag: the z payload the ring
         # moves is (B, S, d) with d = w1 cols
         n = self._ring(axis, cais)
@@ -308,6 +462,8 @@ class CAISBackend(CollectiveBackend):
                                    residual=residual)
 
     def grad_ag_gemm(self, d, wT, axis, cais):
+        if self.hierarchical(axis):
+            return self.hier_grad_ag_gemm(d, wT, axis, cais)
         # decomposed bidirectional ring gather of the cotangent, then the
         # GEMM against the transposed shard — the grad-side mirror of the
         # forward pull alignment
@@ -317,6 +473,8 @@ class CAISBackend(CollectiveBackend):
         return g @ wT, g
 
     def overlap_asymmetric(self, rs_args, ag_args, axis, cais):
+        if self.hierarchical(axis):
+            return self.hier_overlap_asymmetric(rs_args, ag_args, axis, cais)
         # no _resolve: the lockstep schedule moves one S_loc slice per hop
         # on each stream — its chunking is structural, not planner-chosen
         return prim.overlap_asymmetric(rs_args, ag_args, axis, cais)

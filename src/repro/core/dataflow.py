@@ -578,13 +578,19 @@ def execute(g: Graph, values: Dict[str, jnp.ndarray],
     (values/weights are local shards per the layout conventions) and every
     fused collective op dispatches through ``backend`` — a
     :class:`repro.core.backends.CollectiveBackend` instance or registry name
-    (default ``"cais"``). Without ``axis``, collectives degenerate to
-    identity/plain math (single-device reference)."""
+    (default ``"cais"``). ``axis`` may be the composite ``("tp_in",
+    "tp_out")`` tuple of a hierarchical 2D mesh — fused ops thread it to the
+    backend's hierarchical compositions; raw allgather/reduce_scatter nodes
+    compose per-tier here (inter-node gather first / intra-node scatter
+    first, matching the tp_in-major shard order). Without ``axis``,
+    collectives degenerate to identity/plain math (single-device
+    reference)."""
     from repro.core.backends import get_backend
     from repro.models.layers import apply_norm
 
     env = dict(values)
     dist = axis is not None
+    hier = isinstance(axis, (tuple, list)) and len(axis) > 1
     be = get_backend(backend if backend is not None else "cais")
 
     for n in g.nodes:
@@ -595,12 +601,26 @@ def execute(g: Graph, values: Dict[str, jnp.ndarray],
         if n.op == "gemm_col" or n.op == "gemm_row":
             env[n.name] = ins[0] @ ws[0]
         elif n.op == "allgather":
-            env[n.name] = (jax.lax.all_gather(ins[0], axis, axis=1, tiled=True)
-                           if dist else ins[0])
+            if dist and hier:
+                out = jax.lax.all_gather(ins[0], axis[-1], axis=1, tiled=True)
+                env[n.name] = jax.lax.all_gather(out, axis[0], axis=1,
+                                                 tiled=True)
+            else:
+                env[n.name] = (jax.lax.all_gather(ins[0], axis, axis=1,
+                                                  tiled=True)
+                               if dist else ins[0])
         elif n.op == "reduce_scatter":
-            env[n.name] = (jax.lax.psum_scatter(ins[0], axis,
-                                                scatter_dimension=1, tiled=True)
-                           if dist else ins[0])
+            if dist and hier:
+                out = jax.lax.psum_scatter(ins[0], axis[0],
+                                           scatter_dimension=1, tiled=True)
+                env[n.name] = jax.lax.psum_scatter(out, axis[-1],
+                                                   scatter_dimension=1,
+                                                   tiled=True)
+            else:
+                env[n.name] = (jax.lax.psum_scatter(ins[0], axis,
+                                                    scatter_dimension=1,
+                                                    tiled=True)
+                               if dist else ins[0])
         elif n.op == "allreduce":
             env[n.name] = jax.lax.psum(ins[0], axis) if dist else ins[0]
         elif n.op == "layernorm":

@@ -48,6 +48,21 @@ class Fabric:
     peak: float = 494e12        # effective FLOP/s (paper: 50% SMs of H100)
     mxu_eff: float = 0.55       # achievable GEMM efficiency
     launch: float = 5e-6        # per-kernel launch overhead (software stacks)
+    # Hierarchical 2D-TP tier (docs/topology.md): when ``n_outer > 1`` the
+    # ring factors into n_inner·n_outer and collectives decompose into an
+    # intra-node leg on (bw, alpha) plus an inter-node leg on (bw2, alpha2).
+    # Defaults keep every existing single-tier fabric bit-identical.
+    bw2: Optional[float] = None     # inter-node bytes/s per link per dir
+    alpha2: Optional[float] = None  # inter-node per-hop latency (s)
+    n_outer: int = 1                # inter-node ring size
+
+    @property
+    def two_tier(self) -> bool:
+        return self.n_outer > 1 and self.bw2 is not None
+
+    @property
+    def n_inner(self) -> int:
+        return max(self.n // max(self.n_outer, 1), 1)
 
 
 @dataclass(frozen=True)

@@ -50,11 +50,17 @@ class CAISConfig:
     :mod:`repro.core.backends` backend then plans it per collective from
     payload bytes and ring size via ``coordination.plan``; primitives called
     directly fall back to ``DEFAULT_NUM_CHUNKS``. An explicit integer is a
-    static override honored everywhere."""
+    static override honored everywhere.
+
+    ``hw`` is the :class:`repro.hw.HWSpec` the planner plans against
+    (``None`` → the default V5E). On hierarchical 2D meshes the backend
+    plans inter-node legs with ``hw.inter_tier()`` — the satellite fix for
+    planning every axis against the flat-ring bandwidth."""
 
     num_chunks: Optional[int] = None   # micro-chunks per local shard
     bidirectional: bool = True         # use both ring directions
     interpret_n: Optional[int] = None  # override ring size (tests)
+    hw: Optional[object] = None        # repro.hw.HWSpec for chunk planning
 
 
 def _ring_perms(n: int, direction: int) -> Sequence[Tuple[int, int]]:
@@ -291,6 +297,49 @@ def ring_all_gather(x: jnp.ndarray, axis: str,
     ordered = jnp.roll(jnp.flip(parts, axis=0), i + 1, axis=0)
     return ordered.transpose(1, 0, *range(2, ordered.ndim)).reshape(
         B, n * S_loc, *x.shape[2:])
+
+
+def ring_reduce_scatter(x: jnp.ndarray, axis: str,
+                        cais: CAISConfig = CAISConfig()) -> jnp.ndarray:
+    """Decomposed (bidirectional) ring reduce-scatter along dim 1 — the
+    standalone counterpart of :func:`gemm_rs`'s rotating accumulator, used
+    as the outer-tier (inter-node) leg of hierarchical compositions where
+    the GEMM already happened on the inner ring."""
+    n = cais.interpret_n or _axis_size(axis)
+    if n == 1:
+        return x
+    S = x.shape[1]
+    S_loc = S // n
+    i = lax.axis_index(axis)
+
+    def part(j, lo, ln):
+        return lax.dynamic_slice_in_dim(x, j * S_loc + lo, ln, axis=1)
+
+    if cais.bidirectional and n % 2 == 0 and S_loc % 2 == 0:
+        h = S_loc // 2
+        fwd = _ring_perms(n, +1)
+        bwd = _ring_perms(n, -1)
+
+        def step(carry, t):
+            accf, accb = carry
+            accf = lax.ppermute(accf, axis, fwd)
+            accb = lax.ppermute(accb, axis, bwd)
+            jf = (i - 1 - t) % n
+            jb = (i + 1 + t) % n
+            return (accf + part(jf, 0, h), accb + part(jb, h, h)), None
+
+        acc0 = (part((i - 1) % n, 0, h), part((i + 1) % n, h, h))
+        (accf, accb), _ = lax.scan(step, acc0, jnp.arange(1, n))
+        return jnp.concatenate([accf, accb], axis=1)
+
+    fwd = _ring_perms(n, +1)
+
+    def step(acc, t):
+        acc = lax.ppermute(acc, axis, fwd)
+        return acc + part((i - 1 - t) % n, 0, S_loc), None
+
+    acc, _ = lax.scan(step, part((i - 1) % n, 0, S_loc), jnp.arange(1, n))
+    return acc
 
 
 # ---------------------------------------------------------------------------

@@ -89,6 +89,12 @@ class TPContext:
 
     def __post_init__(self):
         object.__setattr__(self, "backend", get_backend(self.backend))
+        # thread the target-hardware model into the cais chunk planner so
+        # the backend can plan per-tier chunk counts (inter-node legs plan
+        # against hw.inter_tier()) without a second plumbing path
+        if self.cais.hw is None:
+            object.__setattr__(
+                self, "cais", dataclasses.replace(self.cais, hw=self.hw))
 
     @classmethod
     def from_config(cls, tp: "TPConfig", mesh: Mesh,
@@ -111,7 +117,40 @@ class TPContext:
 
     @property
     def tp(self) -> int:
-        return sharding.axis_size(self.mesh, MODEL)
+        """Total TP degree (flat axis size, or tp_in·tp_out on a 2D mesh)."""
+        return sharding.tp_size(self.mesh)
+
+    @property
+    def tp_axes(self):
+        """The TP axis entry for specs / collectives: ``"model"`` on a flat
+        mesh, the composite ``("tp_in", "tp_out")`` tuple on a 2D one."""
+        return sharding.tp_axes(self.mesh)
+
+    @property
+    def is_2d(self) -> bool:
+        return isinstance(self.tp_axes, tuple)
+
+    @property
+    def route_axis(self):
+        """The axis the MoE expert all-to-all crosses: the slow ``tp_out``
+        ring on a 2D mesh (grouped-EP — experts replicate across ``tp_in``),
+        the full model axis on a flat one."""
+        ax = self.tp_axes
+        return ax[-1] if isinstance(ax, tuple) else ax
+
+    @property
+    def route_ring(self) -> int:
+        """Ring size of :attr:`route_axis` (the expert-sharding degree)."""
+        return sharding.axis_size(self.mesh, self.route_axis)
+
+    @property
+    def topology(self):
+        """(n_inner, n_outer) ring sizes — (tp, 1) on a flat mesh."""
+        ax = self.tp_axes
+        if isinstance(ax, tuple):
+            return (sharding.axis_size(self.mesh, ax[0]),
+                    sharding.axis_size(self.mesh, ax[-1]))
+        return (self.tp, 1)
 
 
 def _specs(mesh, *entries):
@@ -365,20 +404,22 @@ def sp_ffn(tpc: TPContext, x, norm_scale, w_up, w_gate, w_down,
     wnames = ("scale", "w_up") + (("w_gate",) if has_gate else ()) + \
         ("w_down",)
 
+    M = tpc.tp_axes
+
     def local(x, *ws):
         return df.execute(graph, {"x": x}, dict(zip(wnames, ws)),
-                          axis=MODEL, cais=tpc.cais, norm=norm_kind,
+                          axis=M, cais=tpc.cais, norm=norm_kind,
                           backend=tpc.backend)[0]
 
-    in_specs = [(BATCH, MODEL, None),            # x sequence-sharded
+    in_specs = [(BATCH, M, None),                # x sequence-sharded
                 (None,),                         # norm scale replicated
-                (None, MODEL)]                   # up col-sharded
+                (None, M)]                       # up col-sharded
     if has_gate:
-        in_specs.append((None, MODEL))           # gate col-sharded
-    in_specs.append((MODEL, None))               # down row-sharded
+        in_specs.append((None, M))               # gate col-sharded
+    in_specs.append((M, None))                   # down row-sharded
     args = (x, norm_scale, w_up) + ((w_gate,) if has_gate else ()) + \
         (w_down,)
-    return _smap(tpc, local, in_specs, (BATCH, MODEL, None))(*args)
+    return _smap(tpc, local, in_specs, (BATCH, M, None))(*args)
 
 
 # ---------------------------------------------------------------------------
@@ -386,11 +427,13 @@ def sp_ffn(tpc: TPContext, x, norm_scale, w_up, w_gate, w_down,
 # ---------------------------------------------------------------------------
 
 
-def _attention_core_fn(cfg, tp: int, window: int = 0, prefix_len: int = 0
-                       ) -> Callable:
+def _attention_core_fn(cfg, tp: int, window: int = 0, prefix_len: int = 0,
+                       axis=MODEL) -> Callable:
     """The local attention math (rope, KV head slicing, flash core, head
     reshape) as a closure for a ``custom`` IR node — shared by
-    :func:`sp_attention` and :func:`sp_block`."""
+    :func:`sp_attention` and :func:`sp_block`. ``axis`` is the TP axis entry
+    (a name, or the composite 2D tuple — the replicated-KV slice uses the
+    flattened shard index, which matches contiguous head sharding)."""
     from repro.models.attention import attention_core
     from repro.models.layers import apply_rope
 
@@ -410,7 +453,7 @@ def _attention_core_fn(cfg, tp: int, window: int = 0, prefix_len: int = 0
             # (contiguous because head sharding is contiguous)
             g = H // Hkv                    # q heads per kv head
             need = max(H_loc // g, 1)
-            start = (jax.lax.axis_index(MODEL) * H_loc) // g
+            start = (sharding.shard_map_axis_index(axis) * H_loc) // g
             k = jax.lax.dynamic_slice_in_dim(k, start, need, axis=2)
             v = jax.lax.dynamic_slice_in_dim(v, start, need, axis=2)
         o = attention_core(q, k, v, q_positions=pos, kv_positions=pos,
@@ -433,9 +476,10 @@ def sp_attention(tpc: TPContext, x, norm_scale, wq, wk, wv, wo, cfg, *,
     o = _sp_opts(opts, kw)
     norm_kind = o.norm_kind
     tp = tpc.tp
+    M = tpc.tp_axes
     kv_sharded = cfg.num_kv_heads % tp == 0
     core = _attention_core_fn(cfg, tp, window=o.window,
-                              prefix_len=o.prefix_len)
+                              prefix_len=o.prefix_len, axis=M)
 
     graph = df.optimize(attention_sublayer_graph(core))
 
@@ -443,16 +487,16 @@ def sp_attention(tpc: TPContext, x, norm_scale, wq, wk, wv, wo, cfg, *,
         return df.execute(graph, {"x": x},
                           {"scale": norm_scale, "wq": wq, "wk": wk,
                            "wv": wv, "wo": wo},
-                          axis=MODEL, cais=tpc.cais, norm=norm_kind,
+                          axis=M, cais=tpc.cais, norm=norm_kind,
                           backend=tpc.backend)[0]
 
-    kv_spec = (None, MODEL) if kv_sharded else (None, None)
+    kv_spec = (None, M) if kv_sharded else (None, None)
     return _smap(
         tpc, local,
-        in_specs=[(BATCH, MODEL, None), (None,),
-                  (None, MODEL), kv_spec, kv_spec,
-                  (MODEL, None)],
-        out_specs=(BATCH, MODEL, None))(x, norm_scale, wq, wk, wv, wo)
+        in_specs=[(BATCH, M, None), (None,),
+                  (None, M), kv_spec, kv_spec,
+                  (M, None)],
+        out_specs=(BATCH, M, None))(x, norm_scale, wq, wk, wv, wo)
 
 
 # ---------------------------------------------------------------------------
@@ -467,11 +511,18 @@ def sp_moe_ffn(tpc: TPContext, x, norm_scale, params, cfg,
     shard's tokens to expert owners; the ``cais`` backend overlaps the
     interleaved ±direction dispatch/combine permutes with the expert GEMMs.
 
-    Owner mapping: device j owns experts [j·E_loc, (j+1)·E_loc) when
-    E ≥ tp (E % tp == 0); when E < tp (tp % E == 0) expert e lives on
-    device e·(tp/E) and the others idle through the FFN (their buffers are
-    zero-capacity padding). x: (B, S, d) sequence-sharded. Returns FFN(LN(x))
-    (residual handled by the caller) and the load-balancing aux loss.
+    Owner mapping: rank j of the ROUTE ring owns experts
+    [j·E_loc, (j+1)·E_loc) when E ≥ ring (E % ring == 0); when E < ring
+    (ring % E == 0) expert e lives on rank e·(ring/E) and the others idle
+    through the FFN (their buffers are zero-capacity padding). On a flat
+    mesh the route ring is the whole model axis; on a hierarchical 2D mesh
+    it is the slow ``tp_out`` axis only — grouped EP: expert weights shard
+    over ``tp_out`` and replicate across ``tp_in``, so the all-to-all never
+    crosses the fast intra-node links redundantly (docs/topology.md). This
+    is what makes E < tp configurations first-class: E=4 on an 8-way 2×4
+    mesh is plain E % tp_out == 0 expert sharding. x: (B, S, d)
+    sequence-sharded. Returns FFN(LN(x)) (residual handled by the caller)
+    and the load-balancing aux loss.
 
     The routing/expert/combine math is shared with the whole-block IR path
     (:func:`sp_block`) via the :func:`_moe_graph_fns` closures."""
@@ -479,17 +530,19 @@ def sp_moe_ffn(tpc: TPContext, x, norm_scale, params, cfg,
 
     m = cfg.moe
     E = m.num_experts
-    tp = tpc.tp
+    ring = tpc.route_ring
+    M = tpc.tp_axes
     cais = tpc.cais
     has_gate = "w_gate" in params
-    route_fn, expert_fn, unroute_fn = _moe_graph_fns(cfg, tp, has_gate)
+    route_fn, expert_fn, unroute_fn = _moe_graph_fns(
+        cfg, ring, has_gate, route_axis=tpc.route_axis)
 
     def local(x, ns, router, wu, wg, wd):
         xn = apply_norm(norm_kind, {"scale": ns}, x)
         send, combine, aux = route_fn(xn, router)
         ws = (wu, wg, wd) if has_gate else (wu, wd)
         ret = tpc.backend.a2a_expert_ffn(
-            send, lambda chunk: expert_fn(chunk, *ws), MODEL, cais)
+            send, lambda chunk: expert_fn(chunk, *ws), M, cais)
         out = unroute_fn(ret, combine, xn)
         if m.dense_residual_d_ff:
             from repro.models.ffn import mlp_forward
@@ -501,12 +554,13 @@ def sp_moe_ffn(tpc: TPContext, x, norm_scale, params, cfg,
     wg = params["w_gate"].astype(dtype) if has_gate else \
         jnp.zeros_like(params["w_up"], dtype)
     wd = params["w_down"].astype(dtype)
-    e_spec = (MODEL, None, None) if E % tp == 0 else (None, None, None)
+    e_spec = (tpc.route_axis, None, None) if E % ring == 0 \
+        else (None, None, None)
     out, aux = _smap(
         tpc, local,
-        in_specs=[(BATCH, MODEL, None), (None,), (None, None),
+        in_specs=[(BATCH, M, None), (None,), (None, None),
                   e_spec, e_spec, e_spec],
-        out_specs=[(BATCH, MODEL, None), (MODEL,)])(
+        out_specs=[(BATCH, M, None), (M,)])(
             x, norm_scale, params["router"], wu, wg, wd)
     return out, jnp.mean(aux)
 
@@ -516,20 +570,23 @@ def sp_moe_ffn(tpc: TPContext, x, norm_scale, params, cfg,
 # ---------------------------------------------------------------------------
 
 
-def _moe_graph_fns(cfg, tp: int, has_gate: bool):
+def _moe_graph_fns(cfg, ring: int, has_gate: bool, route_axis=MODEL):
     """Closures for the MoE expert path (route / a2a expert compute /
     unroute) — the single home of this math, used both as IR node ``fn``s
     by :func:`sp_block`'s graph and composed directly by
-    :func:`sp_moe_ffn`. Owner mapping as documented on ``sp_moe_ffn``:
-    device j owns experts [j·E_loc, (j+1)·E_loc) when E ≥ tp; when E < tp
-    expert e lives on device e·(tp/E) (replicated weights sliced per owner,
-    zero-capacity padding elsewhere)."""
+    :func:`sp_moe_ffn`. ``ring`` is the size of the all-to-all ring and
+    ``route_axis`` its mesh axis name: the full model axis on a flat mesh,
+    the slow ``tp_out`` axis on a hierarchical 2D mesh (grouped EP). Owner
+    mapping as documented on ``sp_moe_ffn``: ring rank j owns experts
+    [j·E_loc, (j+1)·E_loc) when E ≥ ring; when E < ring expert e lives on
+    rank e·(ring/E) (replicated weights sliced per owner, zero-capacity
+    padding elsewhere)."""
     from repro.models.ffn import _top2_dispatch
     from repro.models.layers import activation
 
     m = cfg.moe
     E = m.num_experts
-    E_loc = max(E // tp, 1)
+    E_loc = max(E // ring, 1)
 
     def route_fn(xn, router):
         B, S_loc, d = xn.shape
@@ -542,12 +599,12 @@ def _moe_graph_fns(cfg, tp: int, has_gate: bool):
         dispatch, combine = dispatch[0], combine[0]     # (T, E, cap)
         # send[j]: (E_loc·cap, d) tokens for the experts device j owns
         de = jnp.einsum("tec,td->ecd", dispatch.astype(t.dtype), t)
-        if E >= tp:
-            send = de.reshape(tp, E_loc * cap, d)
+        if E >= ring:
+            send = de.reshape(ring, E_loc * cap, d)
         else:
-            # owner(e) = e·(tp/E); other devices get zero-capacity padding
-            stride = tp // E
-            send = jnp.zeros((tp, cap, d), t.dtype)
+            # owner(e) = e·(ring/E); other ranks get zero-capacity padding
+            stride = ring // E
+            send = jnp.zeros((ring, cap, d), t.dtype)
             send = send.at[::stride].set(de)
         return send, combine, aux.astype(jnp.float32)[None]
 
@@ -555,9 +612,9 @@ def _moe_graph_fns(cfg, tp: int, has_gate: bool):
         # chunk: (E_loc·cap, d) → per-local-expert gated FFN
         wg = rest[0] if has_gate else None
         wd = rest[-1]
-        if E < tp:
+        if E < ring:
             # replicated weights: slice this owner's single expert
-            eidx = jax.lax.axis_index(MODEL) // (tp // E)
+            eidx = jax.lax.axis_index(route_axis) // (ring // E)
             wu = jax.lax.dynamic_index_in_dim(wu, eidx, 0, keepdims=True)
             wd = jax.lax.dynamic_index_in_dim(wd, eidx, 0, keepdims=True)
             if has_gate:
@@ -575,10 +632,10 @@ def _moe_graph_fns(cfg, tp: int, has_gate: bool):
     def unroute_fn(ret, combine, xn):
         B, S_loc, d = xn.shape
         cap = combine.shape[-1]
-        if E >= tp:
+        if E >= ring:
             eout = ret.reshape(E, cap, d)
         else:
-            eout = ret[::tp // E]
+            eout = ret[::ring // E]
         y = jnp.einsum("tec,ecd->td", combine.astype(ret.dtype), eout)
         return y.reshape(B, S_loc, d)
 
@@ -595,12 +652,14 @@ def _block_graph_fragment(tpc: TPContext, params, cfg, kind: str, idx: int,
     to their shard_map PartitionSpec entries."""
     p = f"b{idx}."
     tp = tpc.tp
+    M = tpc.tp_axes
     m = params["mixer"]
     kv_sharded = cfg.num_kv_heads % tp == 0
     window = cfg.window if kind == "swa" else 0
-    core = _attention_core_fn(cfg, tp, window=window, prefix_len=prefix_len)
+    core = _attention_core_fn(cfg, tp, window=window, prefix_len=prefix_len,
+                              axis=M)
 
-    kv_spec = (None, MODEL) if kv_sharded else (None, None)
+    kv_spec = (None, M) if kv_sharded else (None, None)
     weights = {
         p + "scale1": params["norm1"]["scale"].astype(dtype),
         p + "wq": m["wq"].astype(dtype), p + "wk": m["wk"].astype(dtype),
@@ -608,26 +667,32 @@ def _block_graph_fragment(tpc: TPContext, params, cfg, kind: str, idx: int,
         p + "scale2": params["norm2"]["scale"].astype(dtype),
     }
     specs = {
-        p + "scale1": (None,), p + "wq": (None, MODEL), p + "wk": kv_spec,
-        p + "wv": kv_spec, p + "wo": (MODEL, None), p + "scale2": (None,),
+        p + "scale1": (None,), p + "wq": (None, M), p + "wk": kv_spec,
+        p + "wv": kv_spec, p + "wo": (M, None), p + "scale2": (None,),
     }
 
     f = params["ffn"]
     has_gate = "w_gate" in f
     moe = cfg.moe is not None
     if moe:
+        ring = tpc.route_ring
         assert seq_sharded, \
             "MoE blocks run only on the sequence-sharded period path"
-        assert cfg.moe.num_experts % tp == 0, \
-            "sp_block MoE path requires E % tp == 0 (see tp_applicable)"
-        route_fn, expert_fn, unroute_fn = _moe_graph_fns(cfg, tp, has_gate)
+        assert cfg.moe.num_experts % ring == 0, \
+            "sp_block MoE path requires E % route_ring == 0 " \
+            "(see tp_applicable)"
+        route_fn, expert_fn, unroute_fn = _moe_graph_fns(
+            cfg, ring, has_gate, route_axis=tpc.route_axis)
         weights[p + "router"] = f["router"]             # stays float32
         specs[p + "router"] = (None, None)
         e_keys = tuple(p + kk for kk in ("w_up",)
                        + (("w_gate",) if has_gate else ()) + ("w_down",))
         for kkey in e_keys:
             weights[kkey] = f[kkey[len(p):]].astype(dtype)
-            specs[kkey] = (MODEL, None, None)
+            # grouped EP on a 2D mesh: experts shard over tp_out only and
+            # replicate across tp_in (gradients psum over tp_in in
+            # local_bwd's missing-axes pass)
+            specs[kkey] = (tpc.route_axis, None, None)
         dense_fn, d_keys = None, ()
         if cfg.moe.dense_residual_d_ff:
             dm = f["dense"]
@@ -661,12 +726,12 @@ def _block_graph_fragment(tpc: TPContext, params, cfg, kind: str, idx: int,
                                         src=src, seq_sharded=seq_sharded)
         aux = None
         weights[p + "w_up"] = f["w_up"].astype(dtype)
-        specs[p + "w_up"] = (None, MODEL)
+        specs[p + "w_up"] = (None, M)
         if has_gate:
             weights[p + "w_gate"] = f["w_gate"].astype(dtype)
-            specs[p + "w_gate"] = (None, MODEL)
+            specs[p + "w_gate"] = (None, M)
         weights[p + "w_down"] = f["w_down"].astype(dtype)
-        specs[p + "w_down"] = (MODEL, None)
+        specs[p + "w_down"] = (M, None)
     return nodes, out, aux, weights, specs
 
 
@@ -731,10 +796,22 @@ def resolve_microbatches(tpc: TPContext, x,
             return 1
         payload = b_loc * int(x.shape[1]) * int(x.shape[2]) * \
             np.dtype(x.dtype).itemsize
-        mb = coordination.plan_microbatches(b_loc, float(payload), tpc.tp,
-                                            bidirectional=
-                                            tpc.cais.bidirectional,
-                                            hw=tpc.hw)
+        n_in, n_out = tpc.topology
+        if n_out > 1:
+            # 2D mesh: the slow inter-node tier dominates the collective
+            # time the split amortizes — plan against the tp_out ring with
+            # the inter-tier α-β model and the per-node payload (the outer
+            # exchange moves 1/tp_in of the gathered activation per rank)
+            mb = coordination.plan_microbatches(
+                b_loc, float(payload) / max(n_in, 1), n_out,
+                bidirectional=tpc.cais.bidirectional,
+                hw=tpc.hw.inter_tier())
+        else:
+            mb = coordination.plan_microbatches(b_loc, float(payload),
+                                                tpc.tp,
+                                                bidirectional=
+                                                tpc.cais.bidirectional,
+                                                hw=tpc.hw)
     else:
         mb = int(req)
     mb = max(1, min(mb, b_loc))
@@ -789,6 +866,7 @@ def _plan_period(tpc: TPContext, base: df.Graph, weights, x,
         weight_shapes={k: tuple(v.shape) for k, v in weights.items()},
         dtype_bytes=np.dtype(x.dtype).itemsize, tp=tpc.tp,
         backend=tpc.mode, mb_candidates=cands, hw=tpc.hw,
+        n_outer=tpc.topology[1],
         cache=plan_mod.default_cache(), comp_hints=comp_hints)
     return plan.num_microbatches, pairer
 
@@ -820,7 +898,8 @@ def _bwd_planner(tpc: TPContext, tg: "df.TrainingGraph", weights, x,
     return plan_mod.PerfsimPlanner(
         value_shapes=vshapes, weight_shapes=wshapes,
         dtype_bytes=np.dtype(x.dtype).itemsize,
-        fabric=plan_mod.fabric_from_hw(tpc.hw, max(tpc.tp, 2)),
+        fabric=plan_mod.fabric_from_hw(tpc.hw, max(tpc.tp, 2),
+                                       n_outer=tpc.topology[1]),
         backend=tpc.mode, num_microbatches=mb,
         cache=plan_mod.default_cache(), comp_hints=bh or None)
 
@@ -872,6 +951,7 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str], *,
     o = _sp_opts(opts, kw)
     norm_kind = o.norm_kind
     dtype = x.dtype
+    M = tpc.tp_axes
     base, weights, specs, aux_vals = _period_graph(
         tpc, params_seq, cfg, kinds, prefix_len=o.prefix_len, dtype=dtype,
         seq_sharded=o.seq_sharded)
@@ -887,14 +967,14 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str], *,
     def local(x, *ws):
         wmap = dict(zip(names, ws))
         if mb == 1:
-            return df.execute(graph, {"x": x}, wmap, axis=MODEL,
+            return df.execute(graph, {"x": x}, wmap, axis=M,
                               cais=tpc.cais, norm=norm_kind,
                               backend=tpc.backend)
         res = df.execute(
             graph,
             {f"mb{i}.x": xi
              for i, xi in enumerate(jnp.split(x, mb, axis=0))},
-            wmap, axis=MODEL, cais=tpc.cais, norm=norm_kind,
+            wmap, axis=M, cais=tpc.cais, norm=norm_kind,
             backend=tpc.backend)
         per = 1 + n_aux
         out = jnp.concatenate([res[i * per] for i in range(mb)], axis=0)
@@ -902,9 +982,9 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str], *,
                       for j in range(n_aux))
         return (out,) + auxes
 
-    x_spec = (BATCH, MODEL, None) if o.seq_sharded else (BATCH, None, None)
+    x_spec = (BATCH, M, None) if o.seq_sharded else (BATCH, None, None)
     in_specs = [x_spec] + [specs[k] for k in names]
-    out_specs = [x_spec] + [(MODEL,)] * n_aux
+    out_specs = [x_spec] + [(M,)] * n_aux
     fwd_call = _smap(tpc, local, in_specs, out_specs)
 
     use_graph_bwd = (tpc.graph_backward and o.seq_sharded and not aux_vals
@@ -932,7 +1012,20 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str], *,
     # completed inside
     batch_axes = tuple(a for a in _BATCH_AXES
                        if a in tpc.mesh.axis_names)
-    model_in_mesh = MODEL in tpc.mesh.axis_names
+    # every TP mesh axis a weight's spec does NOT mention replicates that
+    # weight there, so its gradient partial-sums must psum over it — on a
+    # 2D mesh this is how grouped-EP expert grads reduce over tp_in only
+    tp_names = M if isinstance(M, tuple) else (M,)
+    tp_names = tuple(a for a in tp_names if a in tpc.mesh.axis_names)
+    grad_psum_axes = {}
+    for k in names:
+        mentioned = set()
+        for e in specs[k]:
+            if isinstance(e, (tuple, list)):
+                mentioned.update(e)
+            elif e is not None:
+                mentioned.add(e)
+        grad_psum_axes[k] = tuple(a for a in tp_names if a not in mentioned)
 
     def local_bwd(x, gy, *ws):
         wmap = df.derived_weights(bwd_graph, dict(zip(names, ws)))
@@ -941,7 +1034,7 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str], *,
         gys = jnp.split(gy, mb, axis=0) if mb > 1 else [gy]
         vals.update(zip(chains, xs))
         vals.update(zip(tg.grad_inputs, gys))
-        res = df.execute(bwd_graph, vals, wmap, axis=MODEL, cais=tpc.cais,
+        res = df.execute(bwd_graph, vals, wmap, axis=M, cais=tpc.cais,
                          norm=norm_kind, backend=tpc.backend)
         got = dict(zip(bwd_graph.outputs, res))
         dxs = [got[tg.dx[c]] for c in chains]
@@ -954,8 +1047,8 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str], *,
                 dw = dw + p_
             if batch_axes:
                 dw = jax.lax.psum(dw, batch_axes)
-            if model_in_mesh and MODEL not in specs[k]:
-                dw = jax.lax.psum(dw, MODEL)
+            if grad_psum_axes[k]:
+                dw = jax.lax.psum(dw, grad_psum_axes[k])
             dws.append(dw.astype(w.dtype))
         return (dx.astype(x.dtype),) + tuple(dws)
 
@@ -979,7 +1072,8 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str], *,
     return period(x, *tuple(weights.values())), jnp.float32(0.0)
 
 
-def _serve_attention_core_fn(cfg, tp: int, window: int = 0) -> Callable:
+def _serve_attention_core_fn(cfg, tp: int, window: int = 0,
+                             axis=MODEL) -> Callable:
     """The paged-serving attention core as a multi-output ``custom`` IR node
     fn: besides q/k/v it takes the :class:`repro.models.attention.KVView`
     arrays (block tables, positions, context lens) and this block's KV pools
@@ -1009,7 +1103,7 @@ def _serve_attention_core_fn(cfg, tp: int, window: int = 0) -> Callable:
         if not kv_sharded:
             g = H // Hkv                    # q heads per kv head
             need = max(H_loc // g, 1)
-            start = (jax.lax.axis_index(MODEL) * H_loc) // g
+            start = (sharding.shard_map_axis_index(axis) * H_loc) // g
             kk = jax.lax.dynamic_slice_in_dim(kk, start, need, axis=2)
             vv = jax.lax.dynamic_slice_in_dim(vv, start, need, axis=2)
         o = attention_core(q, kk, vv, q_positions=qpos, kv_positions=kv_pos,
@@ -1028,12 +1122,13 @@ def _serve_block_fragment(tpc: TPContext, params, cfg, kind: str, idx: int,
     (nodes, out_value, weights, specs)."""
     p = f"b{idx}."
     tp = tpc.tp
+    M = tpc.tp_axes
     m = params["mixer"]
     kv_sharded = cfg.num_kv_heads % tp == 0
     window = cfg.window if kind == "swa" else 0
-    core = _serve_attention_core_fn(cfg, tp, window=window)
+    core = _serve_attention_core_fn(cfg, tp, window=window, axis=M)
 
-    kv_spec = (None, MODEL) if kv_sharded else (None, None)
+    kv_spec = (None, M) if kv_sharded else (None, None)
     weights = {
         p + "scale1": params["norm1"]["scale"].astype(dtype),
         p + "wq": m["wq"].astype(dtype), p + "wk": m["wk"].astype(dtype),
@@ -1041,8 +1136,8 @@ def _serve_block_fragment(tpc: TPContext, params, cfg, kind: str, idx: int,
         p + "scale2": params["norm2"]["scale"].astype(dtype),
     }
     specs = {
-        p + "scale1": (None,), p + "wq": (None, MODEL), p + "wk": kv_spec,
-        p + "wv": kv_spec, p + "wo": (MODEL, None), p + "scale2": (None,),
+        p + "scale1": (None,), p + "wq": (None, M), p + "wk": kv_spec,
+        p + "wv": kv_spec, p + "wo": (M, None), p + "scale2": (None,),
     }
     nodes = [
         df.Node(f"{p}ln1", "layernorm", (src,), (f"{p}scale1",)),
@@ -1064,12 +1159,12 @@ def _serve_block_fragment(tpc: TPContext, params, cfg, kind: str, idx: int,
                               tag="2", p=p, seq_sharded=False)
     nodes.append(df.Node(f"{p}r2", "residual", (f"{p}rs2", f"{p}r1")))
     weights[p + "w_up"] = f["w_up"].astype(dtype)
-    specs[p + "w_up"] = (None, MODEL)
+    specs[p + "w_up"] = (None, M)
     if has_gate:
         weights[p + "w_gate"] = f["w_gate"].astype(dtype)
-        specs[p + "w_gate"] = (None, MODEL)
+        specs[p + "w_gate"] = (None, M)
     weights[p + "w_down"] = f["w_down"].astype(dtype)
-    specs[p + "w_down"] = (MODEL, None)
+    specs[p + "w_down"] = (M, None)
     return nodes, f"{p}r2", weights, specs
 
 
@@ -1128,7 +1223,8 @@ def sp_serve_period(tpc: TPContext, x, params_seq, cfg,
             value_shapes=vshapes,
             weight_shapes={k: tuple(v.shape) for k, v in weights.items()},
             dtype_bytes=np.dtype(x.dtype).itemsize,
-            fabric=plan_mod.fabric_from_hw(tpc.hw, max(tpc.tp, 2)),
+            fabric=plan_mod.fabric_from_hw(tpc.hw, max(tpc.tp, 2),
+                                           n_outer=tpc.topology[1]),
             backend=tpc.mode, cache=plan_mod.default_cache(),
             comp_hints=hints)
     graph = df.optimize(base, planner=planner)
@@ -1140,12 +1236,12 @@ def sp_serve_period(tpc: TPContext, x, params_seq, cfg,
         for i in range(n):
             vals[f"b{i}.kp"] = pools[2 * i]
             vals[f"b{i}.vp"] = pools[2 * i + 1]
-        return df.execute(graph, vals, dict(zip(names, ws)), axis=MODEL,
-                          cais=tpc.cais, norm=norm_kind,
+        return df.execute(graph, vals, dict(zip(names, ws)),
+                          axis=tpc.tp_axes, cais=tpc.cais, norm=norm_kind,
                           backend=tpc.backend)
 
     kv_sharded = cfg.num_kv_heads % tpc.tp == 0
-    pool_spec = (None, None, MODEL, None) if kv_sharded \
+    pool_spec = (None, None, tpc.tp_axes, None) if kv_sharded \
         else (None, None, None, None)
     x_spec = (BATCH, None, None)
     in_specs = ([x_spec, (None, None), (None, None), (None,)]
@@ -1178,21 +1274,28 @@ def sp_block(tpc: TPContext, x, params, cfg, kind: str = "attn", *,
                      opts=_sp_opts(opts, kw))
 
 
-def tp_applicable(cfg, kind: str, tp: int) -> bool:
+def tp_applicable(cfg, kind: str, tp: int,
+                  route_ring: Optional[int] = None) -> bool:
     """Explicit-backend shard_map path requires Q-head and feature
     divisibility (KV heads may replicate); otherwise the block stays on the
-    `auto` path (DESIGN.md §5)."""
+    `auto` path (DESIGN.md §5). ``route_ring`` is the expert-sharding ring
+    (``tp`` on a flat mesh; ``tp_out`` on a hierarchical 2D mesh — pass
+    ``TPContext.route_ring``)."""
     if kind in ("attn", "swa"):
         return cfg.num_heads % tp == 0 and cfg.norm == "rmsnorm"
     if kind == "ffn":
         return cfg.moe is None and cfg.d_ff > 0 and cfg.d_ff % tp == 0 \
             and cfg.norm == "rmsnorm"
     if kind == "moe":
-        # integrated path requires true EP: with E < tp the owner mapping
-        # works (primitive-level tests) but replicated expert weights turn
-        # their gradients into a full-size all-reduce — measured regression,
-        # EXPERIMENTS.md §Perf cell 2. Grouped-EP weight sharding is the
-        # production fix (backlog); until then those archs keep `auto`.
+        # integrated path requires true EP over the route ring: with
+        # E < ring the owner mapping works (primitive-level tests) but
+        # replicated expert weights turn their gradients into a full-size
+        # all-reduce — measured regression, EXPERIMENTS.md §Perf cell 2.
+        # Grouped EP (docs/topology.md) is the production fix: on a 2D
+        # mesh the ring is only ``tp_out``, so E < tp archs qualify
+        # whenever E % tp_out == 0 (expert grads psum over tp_in, the
+        # fast intra-node links).
+        ring = tp if route_ring is None else route_ring
         return cfg.moe is not None and cfg.norm == "rmsnorm" and \
-            cfg.moe.num_experts % tp == 0
+            cfg.moe.num_experts % ring == 0
     return False

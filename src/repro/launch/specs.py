@@ -114,12 +114,13 @@ def param_pspec(path: Tuple[str, ...], shape, cfg: ArchConfig, mesh: Mesh,
     nd = len(base)
     in_moe = "ffn" in path and cfg.moe is not None and "dense" not in path
     tp = sharding.tp_size(mesh)
+    tp_ax = sharding.tp_axes(mesh)  # "model" or ("tp_in", "tp_out")
 
     def fin(spec_list, fsdp_prefer=()):
         # explicit in_shardings demand exact divisibility: drop any axis
         # that does not divide its dim (e.g. odd vocabs stay replicated)
         for i, e in enumerate(spec_list):
-            if e is not None and base[i] % sharding.axis_size(mesh, e) != 0:
+            if e is not None and base[i] % _axsize(mesh, e) != 0:
                 spec_list[i] = None
         if fsdp:
             for i in fsdp_prefer:
@@ -131,22 +132,30 @@ def param_pspec(path: Tuple[str, ...], shape, cfg: ArchConfig, mesh: Mesh,
         return P(*([None] * lead + spec_list))
 
     if name == "embed":                       # (V, d)
-        return fin([M_AX, None], (1,))
+        return fin([tp_ax, None], (1,))
     if name == "router":                      # (d, E) — replicated, f32
         return fin([None, None])
     if in_moe and nd == 3 and name in ("w_up", "w_gate", "w_down"):
         E = base[0]
-        if tp > 1 and E % tp == 0:            # expert parallelism
+        hid = 2 if name in ("w_up", "w_gate") else 1
+        if isinstance(tp_ax, tuple):
+            n_out = sharding.axis_size(mesh, sharding.TP_OUT_AXIS)
+            if n_out > 1 and E % n_out == 0:
+                # grouped EP (docs/topology.md): experts over the slow
+                # tp_out axis only; tp_in's share is the expert hidden dim
+                spec = [sharding.TP_OUT_AXIS, None, None]
+                spec[hid] = sharding.TP_IN_AXIS
+                return fin(spec, (1, 2))
+        elif tp > 1 and E % tp == 0:          # flat expert parallelism
             return fin([M_AX, None, None], (1, 2))
         # expert-TP: shard the ffn hidden dim instead
-        hid = 2 if name in ("w_up", "w_gate") else 1
         spec = [None, None, None]
-        spec[hid] = M_AX
+        spec[hid] = tp_ax
         return fin(spec, (2, 1) if hid == 1 else (1,))
     if name in _COL or (nd == 2 and name in ("w_up", "w_gate")):
-        return fin([None, M_AX], (0,))
+        return fin([None, tp_ax], (0,))
     if name in _ROW or (nd == 2 and name == "w_down"):
-        return fin([M_AX, None], (1,))
+        return fin([tp_ax, None], (1,))
     # everything else (norms, conv filters, gates, biases, ssm params,
     # mamba2's fused in-proj — see DESIGN.md §5 applicability) replicates
     return P(*([None] * lead + [None] * nd))
@@ -240,11 +249,15 @@ def _cache_leaf_spec(name: str, nd: int) -> P:
 
 
 def cache_shardings(mesh: Mesh, cache_shape, layout: str = "context"):
+    tp_ax = sharding.tp_axes(mesh)
+
     def one(path, leaf):
         name = _path_keys(path)[-1]
         spec = _cache_leaf_spec(name, len(leaf.shape))
         if layout == "batch_only":   # drop the model-axis (context) sharding
             spec = P(*(None if e == M_AX else e for e in spec))
+        else:                        # composite TP axes on 2D meshes
+            spec = P(*(tp_ax if e == M_AX else e for e in spec))
         spec = sanitize_spec(mesh, tuple(spec), leaf.shape)
         return sharding.named_sharding(mesh, *spec)
     return jax.tree_util.tree_map_with_path(one, cache_shape)
@@ -258,7 +271,8 @@ def pool_shardings(cfg: ArchConfig, mesh: Mesh, pools_shape):
     inside the graph path); GQA pools whose heads don't divide stay fully
     replicated (every device writes identical values)."""
     tp = sharding.tp_size(mesh)
-    head = M_AX if tp > 1 and cfg.num_kv_heads % tp == 0 else None
+    head = sharding.tp_axes(mesh) if tp > 1 and cfg.num_kv_heads % tp == 0 \
+        else None
 
     def one(path, leaf):
         nd = len(leaf.shape)

@@ -131,11 +131,23 @@ def moe_forward(params, x, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
     # EP when experts divide the TP axis (arctic: 128/16); otherwise shard
     # the expert FFN's hidden dim instead (mixtral: 8 experts < 16 chips —
-    # expert-TP avoids 2× padding waste). See launch/specs.py param rules.
-    tp = sharding.tp_size(sharding.current_mesh())
-    ep = tp > 1 and E % tp == 0
-    e_ax = sharding.MODEL_AXIS if ep else None
-    f_ax = None if ep else sharding.MODEL_AXIS
+    # expert-TP avoids 2× padding waste). On a hierarchical 2D mesh the
+    # rule is grouped EP (docs/topology.md): experts shard over the slow
+    # ``tp_out`` axis only and replicate across ``tp_in``, whose share is
+    # the expert hidden dim — so E < tp archs get true EP whenever
+    # E % tp_out == 0. See launch/specs.py param rules.
+    mesh = sharding.current_mesh()
+    tp_ax = sharding.tp_axes(mesh)
+    if isinstance(tp_ax, tuple):
+        n_out = sharding.axis_size(mesh, sharding.TP_OUT_AXIS)
+        ep = n_out > 1 and E % n_out == 0
+        e_ax = sharding.TP_OUT_AXIS if ep else None
+        f_ax = sharding.TP_IN_AXIS if ep else tp_ax
+    else:
+        tp = sharding.tp_size(mesh)
+        ep = tp > 1 and E % tp == 0
+        e_ax = sharding.MODEL_AXIS if ep else None
+        f_ax = None if ep else sharding.MODEL_AXIS
 
     # dispatch: tokens -> expert buffers (E, G, C, d)
     einp = jnp.einsum("gsec,gsd->egcd", dispatch.astype(dtype), xt)

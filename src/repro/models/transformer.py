@@ -80,7 +80,7 @@ def _tp_context(rt: Runtime):
     backend = get_backend(rt.tp.mode)
     mesh = sharding.current_mesh()
     if (not backend.explicit or mesh is None
-            or sharding.axis_size(mesh, sharding.MODEL_AXIS) <= 1):
+            or sharding.tp_size(mesh) <= 1):
         return None
     return TPContext.from_config(rt.tp, mesh)
 
@@ -92,19 +92,23 @@ def _sp_axis(rt: Runtime, x):
     an unsatisfiable sharding constraint."""
     if not rt.tp.sequence_parallel or x.shape[1] <= 1:
         return None
-    n = sharding.axis_size(sharding.current_mesh(), sharding.MODEL_AXIS)
-    return sharding.MODEL_AXIS if n > 1 and x.shape[1] % n == 0 else None
+    mesh = sharding.current_mesh()
+    n = sharding.tp_size(mesh)
+    return sharding.tp_axes(mesh) if n > 1 and x.shape[1] % n == 0 else None
 
 
-def _whole_block_applicable(cfg: ArchConfig, kind: str, tp: int) -> bool:
+def _whole_block_applicable(cfg: ArchConfig, kind: str, tp: int,
+                            route_ring: Optional[int] = None) -> bool:
     """Can this block run as ONE dataflow graph (attention AND FFN/MoE side
     both explicit-TP-applicable)? Shared by the per-block and period paths
-    so their gating cannot drift apart."""
+    so their gating cannot drift apart. ``route_ring`` is the MoE routing
+    ring (== tp on a flat mesh; the ``tp_out`` size on a 2D mesh, where
+    experts shard only over the slow axis — grouped EP)."""
     from repro.core import tp as tp_mod
 
     return (kind in ("attn", "swa") and tp_mod.tp_applicable(cfg, kind, tp)
             and _has_ffn(cfg)
-            and (tp_mod.tp_applicable(cfg, "moe", tp)
+            and (tp_mod.tp_applicable(cfg, "moe", tp, route_ring)
                  or tp_mod.tp_applicable(cfg, "ffn", tp)))
 
 
@@ -128,7 +132,8 @@ def block_forward(kind, params, x, cfg: ArchConfig, rt: Runtime,
     dtype = x.dtype
 
     # ----- whole block as one dataflow graph -----
-    whole = tpc is not None and _whole_block_applicable(cfg, kind, tpc.tp)
+    whole = tpc is not None and _whole_block_applicable(cfg, kind, tpc.tp,
+                                                        tpc.route_ring)
     if whole and x.shape[1] % tpc.tp == 0:
         x, aux = tp_mod.sp_block(tpc, x, params, cfg, kind,
                                  prefix_len=prefix_len, norm_kind=cfg.norm)
@@ -158,7 +163,8 @@ def block_forward(kind, params, x, cfg: ArchConfig, rt: Runtime,
     # ----- ffn -----
     aux = jnp.float32(0.0)
     if _has_ffn(cfg):
-        if tpc is not None and tp_mod.tp_applicable(cfg, "moe", tpc.tp) \
+        if tpc is not None \
+                and tp_mod.tp_applicable(cfg, "moe", tpc.tp, tpc.route_ring) \
                 and x.shape[1] % tpc.tp == 0:
             out, aux = tp_mod.sp_moe_ffn(
                 tpc, x, params["norm2"]["scale"].astype(dtype),
@@ -271,7 +277,8 @@ def _blocks_step(kinds, params_seq, x, pools_seq, view, cfg: ArchConfig,
     tpc = _tp_context(rt)
     if (tpc is not None and len(params_seq) > 0 and cfg.moe is None
             and all(k in ("attn", "swa") for k in kinds)
-            and all(_whole_block_applicable(cfg, k, tpc.tp) for k in kinds)
+            and all(_whole_block_applicable(cfg, k, tpc.tp, tpc.route_ring)
+                    for k in kinds)
             and sharding.dp_size(tpc.mesh) <= 1):
         x, pools = tp_mod.sp_serve_period(tpc, x, params_seq, cfg, kinds,
                                           pools_seq, view,
@@ -301,9 +308,10 @@ def init_block_cache(kind, cfg: ArchConfig, batch: int, s_max: int, dtype):
 
 def cache_pspec(kind: str, cfg: ArchConfig):
     """PartitionSpec entries per cache leaf: batch→data axes; the long axis
-    (cache sequence / state width / heads) → model (context parallelism)."""
+    (cache sequence / state width / heads) → the TP axes (context
+    parallelism; the composite ``(tp_in, tp_out)`` tuple on 2D meshes)."""
     B = sharding.BATCH_AXES
-    M = sharding.MODEL_AXIS
+    M = sharding.tp_axes(sharding.current_mesh())
     if kind in ("attn", "swa"):
         spec = {"k": (B, M, None, None), "v": (B, M, None, None)}
         if kind == "swa":
@@ -361,7 +369,7 @@ def _blocks_forward(kinds, params_seq, x, cfg: ArchConfig, rt: Runtime,
     tpc = _tp_context(rt)
     if (tpc is not None and len(params_seq) > 0
             and x.shape[1] % tpc.tp == 0
-            and all(_whole_block_applicable(cfg, k, tpc.tp)
+            and all(_whole_block_applicable(cfg, k, tpc.tp, tpc.route_ring)
                     for k in kinds)):
         x, aux = tp_mod.sp_period(tpc, x, params_seq, cfg, kinds,
                                   prefix_len=prefix_len, norm_kind=cfg.norm)
@@ -488,8 +496,8 @@ def pool_pspec(cfg: ArchConfig):
     GQA replicated-KV layout — every device computes the full K/V
     deterministically, so replicas stay consistent)."""
     mesh = sharding.current_mesh()
-    tp = sharding.axis_size(mesh, sharding.MODEL_AXIS) if mesh else 1
-    head = sharding.MODEL_AXIS if tp > 1 and cfg.num_kv_heads % tp == 0 \
+    tp = sharding.tp_size(mesh)
+    head = sharding.tp_axes(mesh) if tp > 1 and cfg.num_kv_heads % tp == 0 \
         else None
     return (None, None, head, None)
 
@@ -567,7 +575,7 @@ def chunked_ce_loss(x, embed_or_head, labels, mask, cfg: ArchConfig,
         logits = xc @ (w.T if tied else w).astype(dtype)
         logits = softcap(logits.astype(jnp.float32), cfg.logits_softcap)
         logits = sharding.shard(logits, sharding.BATCH_AXES, None,
-                                sharding.MODEL_AXIS)
+                                sharding.tp_axes(sharding.current_mesh()))
         lse = jax.nn.logsumexp(logits, -1)
         gold = jnp.take_along_axis(logits, yc[..., None], -1)[..., 0]
         nll = (lse - gold) * mc
@@ -647,7 +655,7 @@ class LM:
         logits = x @ (head.T if tied else head).astype(x.dtype)
         logits = softcap(logits.astype(jnp.float32), self.cfg.logits_softcap)
         return sharding.shard(logits, sharding.BATCH_AXES, None,
-                              sharding.MODEL_AXIS)
+                              sharding.tp_axes(sharding.current_mesh()))
 
     def prefill(self, params, tokens, s_max: Optional[int] = None):
         """Returns (last-position logits, caches). ``tokens`` may be the raw

@@ -4,12 +4,19 @@ The UMD multi-node-inference study (PAPERS.md) makes the case that analytic
 cost models are only trustworthy for schedule tuning once their parameters
 are fitted to measurements of the actual platform. Here the measurements are
 the ``benchmarks/sublayer.py`` wall-clock cells committed as
-``$REPRO_BENCH_JSON`` (``BENCH_pr8.json``): each *barrier* cell is rebuilt as
+``$REPRO_BENCH_JSON`` (``BENCH_pr9.json``): each *barrier* cell is rebuilt as
 the very dataflow graph the bench timed (1-block, 2-block period, and the
 microbatch-split period at the ``REPRO_BENCH_TINY`` shapes), lowered through
 :mod:`repro.plan.lower`, and the fabric's effective (``mxu_eff``, ``bw``,
 ``alpha``) are fitted by log-space coordinate descent so simulated and
 measured times agree.
+
+A second pass fits the inter-node tier (docs/topology.md): when the bench
+artifact carries the 2D-mesh barrier cell (``topo.flat_vs_2d.barrier``,
+measured on a ``tp_in × tp_out`` hierarchical mesh), the intra-node fit is
+frozen and (``bw2``, ``alpha2``) of the two-tier fabric are fitted against
+it by the same descent, so the perfsim planner can price the two tiers
+differently (``CalibrationResult.fabric2``).
 
 Only the ``barrier`` cells feed the fit: the measured cells run on
 CPU-emulated virtual devices where ``collective_permute`` chains serialize,
@@ -35,7 +42,7 @@ from repro.core.perfsim import Fabric
 from repro.plan import lower as lower_mod
 
 # max |ln(simulated / measured)| per fitted cell — the documented band
-# (BENCH_pr8.json fits at ≈0.35; the slack absorbs runner timing noise when
+# (BENCH_pr9.json fits at ≈0.23; the slack absorbs runner timing noise when
 # the baseline is regenerated, without letting the fit silently diverge).
 RATIO_TOLERANCE = 0.6
 
@@ -49,12 +56,19 @@ BARRIER_CELLS: Dict[str, Tuple[int, int]] = {
     "period.split_vs_unsplit.barrier": (2, 2),
 }
 
+# 2D-mesh bench row → (blocks, microbatch split, n_outer). Measured on the
+# hierarchical tp_in × tp_out mesh; feeds the (bw2, alpha2) inter-tier fit.
+TOPO_CELLS: Dict[str, Tuple[int, int, int]] = {
+    "topo.flat_vs_2d.barrier": (1, 1, 4),
+}
+
 
 @dataclass(frozen=True)
 class CalibrationResult:
     fabric: Fabric                      # the fitted cost-model fabric
     ratios: Dict[str, float]            # cell → simulated / measured
     max_abs_log_ratio: float            # worst-cell |ln ratio| after the fit
+    fabric2: Optional[Fabric] = None    # two-tier fabric (bw2/alpha2 fitted)
 
     @property
     def within_tolerance(self) -> bool:
@@ -145,8 +159,51 @@ def calibrate(rows, cells: Optional[Dict[str, Tuple[int, int]]] = None,
         return sum((math.log(max(pred[c], 1e-12)) -
                     math.log(max(measured[c], 1e-12))) ** 2 for c in cells)
 
-    # coordinate descent over multiplicative factors, shrinking grid
-    params = ("mxu_eff", "bw", "alpha")
+    f = _descent(f, ("mxu_eff", "bw", "alpha"), loss)
+
+    pred = predict(f)
+    ratios = {c: pred[c] / measured[c] for c in cells}
+
+    # second pass: inter-node tier. Freeze the intra-node fit, seed the
+    # outer tier from it, and fit (bw2, alpha2) against the 2D-mesh cells.
+    fabric2 = None
+    topo = {c: v for c, v in TOPO_CELLS.items() if c in rows}
+    if topo:
+        measured2 = {c: rows[c] * 1e-6 for c in topo}
+        policy2 = lower_mod.policy_for_backend("barrier")
+        compiled2 = []
+        for name, (blocks, mb, n_outer) in topo.items():
+            values, weights = _cell_shapes(blocks, mb)
+            compiled2.append((name, _cell_graph(blocks, mb), values, weights,
+                              n_outer))
+
+        def predict2(fab: Fabric) -> Dict[str, float]:
+            return {name: lower_mod.simulate(
+                g, dataclasses.replace(fab, n_outer=n_o), policy2,
+                value_shapes=values, weight_shapes=weights,
+                dtype_bytes=_TINY["dtype_bytes"])
+                for name, g, values, weights, n_o in compiled2}
+
+        def loss2(fab: Fabric) -> float:
+            pred2 = predict2(fab)
+            return sum((math.log(max(pred2[c], 1e-12)) -
+                        math.log(max(measured2[c], 1e-12))) ** 2
+                       for c in topo)
+
+        fabric2 = dataclasses.replace(f, bw2=f.bw, alpha2=f.alpha)
+        fabric2 = _descent(fabric2, ("bw2", "alpha2"), loss2)
+        pred2 = predict2(fabric2)
+        ratios.update({c: pred2[c] / measured2[c] for c in topo})
+
+    max_err = max(abs(math.log(r)) for r in ratios.values())
+    return CalibrationResult(fabric=f, ratios=ratios,
+                             max_abs_log_ratio=max_err, fabric2=fabric2)
+
+
+def _descent(f: Fabric, params: Tuple[str, ...], loss) -> Fabric:
+    """Log-space coordinate descent: each parameter scales its cost term
+    monotonically, so a shrinking multiplicative grid converges;
+    deterministic by construction."""
     for span in (256.0, 16.0, 4.0, 2.0, 1.25, 1.06):
         for p in params:
             cur = getattr(f, p)
@@ -160,9 +217,4 @@ def calibrate(rows, cells: Optional[Dict[str, Tuple[int, int]]] = None,
                 if l < best_l - 1e-15:
                     best_v, best_l = v, l
             f = dataclasses.replace(f, **{p: best_v})
-
-    pred = predict(f)
-    ratios = {c: pred[c] / measured[c] for c in cells}
-    max_err = max(abs(math.log(r)) for r in ratios.values())
-    return CalibrationResult(fabric=f, ratios=ratios,
-                             max_abs_log_ratio=max_err)
+    return f

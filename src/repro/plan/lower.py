@@ -56,12 +56,23 @@ def policy_for_backend(backend: str, num_chunks: Optional[int] = None
     return p
 
 
-def fabric_from_hw(hw, n: int, mxu_eff: float = 0.55) -> Fabric:
+def fabric_from_hw(hw, n: int, mxu_eff: float = 0.55,
+                   n_outer: int = 1) -> Fabric:
     """A perfsim fabric from a :class:`repro.hw.HWSpec` — the bridge the
     ``tp.sp_period`` planner path uses so the cost model and the α-β
-    coordination planner read the same target-hardware numbers."""
-    return Fabric(n=n, bw=hw.ici_bw, alpha=hw.hop_latency,
-                  peak=hw.peak_flops, mxu_eff=mxu_eff)
+    coordination planner read the same target-hardware numbers.
+    ``n_outer > 1`` builds a two-tier fabric for a hierarchical 2D-TP mesh:
+    the inter-node tier reads the spec's DCN α-β terms, so the planner can
+    price (and chunk) each tier separately (docs/topology.md)."""
+    f = Fabric(n=n, bw=hw.ici_bw, alpha=hw.hop_latency,
+               peak=hw.peak_flops, mxu_eff=mxu_eff)
+    if n_outer > 1:
+        import dataclasses
+        f = dataclasses.replace(
+            f, n_outer=int(n_outer),
+            bw2=getattr(hw, "dcn_bw", hw.ici_bw),
+            alpha2=getattr(hw, "dcn_latency", hw.hop_latency))
+    return f
 
 
 def synthesize_shapes(g: df.Graph, batch: int = 8, seq: int = 512,
@@ -109,7 +120,9 @@ class Lowering:
     dtype_bytes:
         Activation element size (payload bytes = prod(shape) · dtype_bytes).
     num_chunks:
-        Per-collective chunk override (None → ``policy.chunks``).
+        Per-collective chunk override (None → ``policy.chunks``). On a
+        two-tier fabric an ``(inner, outer)`` pair sets a DIFFERENT chunk
+        count per tier — the per-axis chunking the planner sweeps.
     comp_hints:
         Optional node-name → global FLOPs for fn-carrying local math.
     """
@@ -118,14 +131,19 @@ class Lowering:
                  value_shapes: Dict[str, tuple],
                  weight_shapes: Dict[str, tuple],
                  dtype_bytes: int = 4,
-                 num_chunks: Optional[int] = None,
+                 num_chunks=None,
                  comp_hints: Optional[Dict[str, float]] = None):
         self.f = fabric
         self.p = policy
         self.value_shapes = dict(value_shapes)
         self.weight_shapes = dict(weight_shapes)
         self.dtype_bytes = int(dtype_bytes)
-        self.chunks = int(num_chunks or policy.chunks)
+        if isinstance(num_chunks, (tuple, list)):
+            self.chunks = int(num_chunks[0] or policy.chunks)
+            self.chunks_outer = int(num_chunks[-1] or policy.chunks)
+        else:
+            self.chunks = int(num_chunks or policy.chunks)
+            self.chunks_outer = self.chunks
         self.comp_hints = dict(comp_hints or {})
 
     # -- shape/cost helpers -------------------------------------------------
@@ -156,25 +174,55 @@ class Lowering:
             * self.p.compute_mult
         return [sim.add(COMP, dur, tuple(deps))]
 
-    def _phase(self, sim: Sim, st: _State, flops: float, m: float,
-               coll: Optional[str], deps: Sequence[int]) -> List[int]:
-        """One (GEMM, adjacent collective) unit — the perfsim Phase — under
-        the policy's granularity. Returns the exit task ids."""
+    def _legs(self, coll: str, m: float) -> List[tuple]:
+        """The per-tier wire legs of one collective:
+        ``(coll, payload, ring, bw, alpha, chunks, carries_compute)``.
+        Single-tier fabrics emit one leg. Two-tier fabrics decompose the
+        way the hierarchical backends execute (docs/topology.md): AG =
+        inter-node exchange then intra-node gather; RS = intra-node scatter
+        then inter-node exchange; AR = intra-RS → inter-AR → intra-AG. The
+        inter-node leg moves 1/n_inner of the gathered payload on the
+        (bw2, alpha2) tier with its own chunk count. The fused GEMM always
+        rides the compute-adjacent INNER leg."""
+        f = self.f
+        if not f.two_tier:
+            return [(coll, m, f.n, f.bw, f.alpha, self.chunks, True)]
+        n_in = f.n_inner
+        a2 = f.alpha2 if f.alpha2 is not None else f.alpha
+
+        def inner(cl, comp):
+            return (cl, m, n_in, f.bw, f.alpha, self.chunks, comp)
+
+        def outer(cl):
+            return (cl, m / n_in, f.n_outer, f.bw2, a2,
+                    self.chunks_outer, False)
+
+        if coll == "ag":
+            return [outer("ag"), inner("ag", True)]
+        if coll == "rs":
+            return [inner("rs", True), outer("rs")]
+        return [inner("rs", True), outer("ar"), inner("ag", False)]
+
+    def _leg_phase(self, sim: Sim, st: _State, flops: float, m: float,
+                   coll: str, n: int, bw: float, alpha: float, chunks: int,
+                   deps: Sequence[int]) -> List[int]:
+        """One wire leg (+ its riding GEMM compute, if any) under the
+        policy's granularity. Returns the exit task ids."""
         f, p = self.f, self.p
         t_comp = flops / f.n / (f.peak * f.mxu_eff) * p.compute_mult
-        if coll is None:
-            return self._comp(sim, st, flops, deps)
-        bf, bb = ps.dir_bytes(p, coll, m, f.n)
+        bf, bb = ps.dir_bytes(p, coll, m, n)
 
         if p.granularity == "barrier":
             g = sim.add(COMP, t_comp, tuple(deps))
-            ws = ps._emit_barrier_wire(sim, bf, bb, f, p, (g,),
-                                       chunks=max(1, f.n - 1))
+            fb = f if (bw == f.bw and alpha == f.alpha) else \
+                ps.replace(f, bw=bw, alpha=alpha)
+            ws = ps._emit_barrier_wire(sim, bf, bb, fb, p, (g,),
+                                       chunks=max(1, n - 1))
             return ws or [g]
 
         # chunk granularity (cais): wire chains free-run with continuity
         # across phases; serial_frac of per-chunk compute trails its data
-        c = self.chunks
+        c = chunks
         last: List[int] = []
         for _ in range(c):
             ws: List[int] = []
@@ -183,7 +231,7 @@ class Lowering:
                     continue
                 wdeps = ([st.wdep[res]] if st.wdep[res] is not None
                          else list(deps))
-                w = sim.add(res, b / c / f.bw + f.alpha, wdeps)
+                w = sim.add(res, b / c / bw + alpha, wdeps)
                 st.wdep[res] = w
                 ws.append(w)
             gs = sim.add(COMP, p.serial_frac * t_comp / c, ws or list(deps))
@@ -192,6 +240,19 @@ class Lowering:
             st.gdep = g
             last = [g] + ws
         return last
+
+    def _phase(self, sim: Sim, st: _State, flops: float, m: float,
+               coll: Optional[str], deps: Sequence[int]) -> List[int]:
+        """One (GEMM, adjacent collective) unit — the perfsim Phase — under
+        the policy's granularity, decomposed into per-tier legs on a
+        two-tier fabric. Returns the exit task ids."""
+        if coll is None:
+            return self._comp(sim, st, flops, deps)
+        out = list(deps)
+        for lcoll, lm, ln, lbw, lalpha, lc, carries in self._legs(coll, m):
+            out = self._leg_phase(sim, st, flops if carries else 0.0, lm,
+                                  lcoll, ln, lbw, lalpha, lc, out)
+        return out
 
     def _overlap_phases(self, sim: Sim, st: _State,
                         sides: List[Tuple[float, float, str]],
@@ -207,6 +268,21 @@ class Lowering:
             for flops, m, coll in sides:
                 out += self._phase(sim, st, flops, m, coll, deps)
             return out
+        # Two-tier fabric: only the compute-adjacent INNER legs interleave
+        # (ring n_inner); an AG side's inter-node exchange precedes its
+        # chunks, an RS/AR side's trails them — the outer tier cannot be
+        # chunk-interleaved by an intra-node merge table.
+        two = f.two_tier
+        n_ring = f.n_inner if two else f.n
+        side_deps: List[List[int]] = [list(deps) for _ in sides]
+        inner_colls: List[str] = []
+        for i, (flops, m, coll) in enumerate(sides):
+            inner_colls.append("rs" if (two and coll == "ar") else coll)
+            if two and coll == "ag":
+                side_deps[i] = list(self._leg_phase(
+                    sim, st, 0.0, m / n_ring, "ag", f.n_outer, f.bw2,
+                    f.alpha2 if f.alpha2 is not None else f.alpha,
+                    self.chunks_outer, side_deps[i]))
         c = self.chunks
         gdeps: List[Optional[int]] = [st.gdep] * len(sides)
         last: List[int] = []
@@ -214,18 +290,18 @@ class Lowering:
             step: List[int] = []
             for i, (flops, m, coll) in enumerate(sides):
                 t_comp = flops / f.n / (f.peak * f.mxu_eff) * p.compute_mult
-                bf, bb = ps.dir_bytes(p, coll, m, f.n)
+                bf, bb = ps.dir_bytes(p, inner_colls[i], m, n_ring)
                 ws: List[int] = []
                 for res, b in ((WF, bf), (WB, bb)):
                     if b <= 0:
                         continue
                     wdeps = ([st.wdep[res]] if st.wdep[res] is not None
-                             else list(deps))
+                             else side_deps[i])
                     w = sim.add(res, b / c / f.bw + f.alpha, wdeps)
                     st.wdep[res] = w
                     ws.append(w)
                 gs = sim.add(COMP, p.serial_frac * t_comp / c,
-                             ws or list(deps))
+                             ws or side_deps[i])
                 g = sim.add(COMP, (1 - p.serial_frac) * t_comp / c,
                             [gs] + ([gdeps[i]] if gdeps[i] is not None
                                     else []))
@@ -234,6 +310,20 @@ class Lowering:
             last = step
         st.gdep = max(g for g in gdeps if g is not None) \
             if any(g is not None for g in gdeps) else st.gdep
+        if two:
+            a2 = f.alpha2 if f.alpha2 is not None else f.alpha
+            for i, (flops, m, coll) in enumerate(sides):
+                if coll not in ("rs", "ar"):
+                    continue
+                dep = [gdeps[i]] if gdeps[i] is not None else list(deps)
+                t = self._leg_phase(sim, st, 0.0, m / n_ring,
+                                    "rs" if coll == "rs" else "ar",
+                                    f.n_outer, f.bw2, a2,
+                                    self.chunks_outer, dep)
+                if coll == "ar":
+                    t = self._leg_phase(sim, st, 0.0, m, "ag", n_ring,
+                                        f.bw, f.alpha, self.chunks, t)
+                last = last + list(t)
         return last
 
     # -- the node walk ------------------------------------------------------
@@ -353,7 +443,7 @@ def lower_graph(g: df.Graph, fabric: Fabric, policy: Policy,
                 value_shapes: Optional[Dict[str, tuple]] = None,
                 weight_shapes: Optional[Dict[str, tuple]] = None,
                 dtype_bytes: int = 4,
-                num_chunks: Optional[int] = None,
+                num_chunks=None,
                 comp_hints: Optional[Dict[str, float]] = None) -> Sim:
     """Convenience wrapper: lower ``g`` with (possibly synthesized) shapes."""
     if value_shapes is None or weight_shapes is None:

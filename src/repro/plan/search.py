@@ -31,6 +31,12 @@ from repro.plan import lower as lower_mod
 # (None = the policy's own default)
 CHUNK_CANDIDATES: Tuple[Optional[int], ...] = (None, 2, 4, 16)
 
+# extra (inner, outer) chunk pairs swept on two-tier fabrics — the per-axis
+# chunking a hierarchical 2D mesh makes available (the slow inter-node tier
+# usually wants fewer, larger chunks than the intra-node ring)
+TIER_CHUNK_CANDIDATES: Tuple[Tuple[int, int], ...] = \
+    ((2, 1), (4, 1), (4, 2), (16, 2), (16, 4), (2, 4))
+
 
 @dataclass(frozen=True)
 class Plan:
@@ -38,7 +44,7 @@ class Plan:
     chunking, the period split — plus the simulated evidence for it."""
 
     pairing: Tuple[Tuple[str, str], ...]
-    num_chunks: Optional[int]
+    num_chunks: object      # None | int | (inner, outer) on two-tier fabrics
     num_microbatches: int
     makespan: float
     greedy_makespan: float
@@ -51,8 +57,9 @@ class Plan:
 
     @staticmethod
     def from_dict(d: dict) -> "Plan":
+        nc = d["num_chunks"]
         return Plan(pairing=tuple((p[0], p[1]) for p in d["pairing"]),
-                    num_chunks=d["num_chunks"],
+                    num_chunks=tuple(nc) if isinstance(nc, list) else nc,
                     num_microbatches=d["num_microbatches"],
                     makespan=d["makespan"],
                     greedy_makespan=d["greedy_makespan"],
@@ -121,12 +128,18 @@ def search_pairing(g2: df.Graph, *,
     policy = lower_mod.policy_for_backend(backend)
     if policy.granularity == "barrier":
         chunk_candidates = (None,)
+    elif getattr(fabric, "two_tier", False):
+        # per-axis chunking: on a two-tier fabric also sweep (inner, outer)
+        # pairs so the slow tier can chunk differently from the fast one
+        chunk_candidates = tuple(chunk_candidates) + tuple(
+            c for c in TIER_CHUNK_CANDIDATES if c not in chunk_candidates)
 
-    def score(graph: df.Graph, chunks: Optional[int]) -> float:
+    def score(graph: df.Graph, chunks) -> float:
         return lower_mod.simulate(
-            graph, fabric, lower_mod.policy_for_backend(backend, chunks),
+            graph, fabric, policy,
             value_shapes=value_shapes, weight_shapes=weight_shapes,
-            dtype_bytes=dtype_bytes, comp_hints=comp_hints)
+            dtype_bytes=dtype_bytes, num_chunks=chunks,
+            comp_hints=comp_hints)
 
     candidates = enumerate_pairings(g2, branch=branch, max_states=max_states)
     greedy_graph = df.pair_asymmetric(g2)
@@ -232,6 +245,7 @@ def period_planner(base: df.Graph, *,
                    backend: str,
                    mb_candidates: Sequence[int],
                    hw=None,
+                   n_outer: int = 1,
                    cache: Optional[cache_mod.PlanCache] = None,
                    comp_hints: Optional[Dict[str, float]] = None
                    ) -> Tuple[Plan, FixedPairing]:
@@ -239,14 +253,17 @@ def period_planner(base: df.Graph, *,
     num_chunks) for one single-chain period graph, through the plan cache.
 
     ``x_shape`` is the per-DP-replica activation (b_loc, S, d) — the payload
-    the TP collectives actually move. ``comp_hints`` (base-graph node name →
-    FLOPs, part of the cache key) prices the fn-carrying local math.
-    Returns the winning :class:`Plan` and a :class:`FixedPairing` to hand
-    to ``dataflow.optimize(planner=...)`` for the mb-merged graph."""
+    the TP collectives actually move. ``n_outer > 1`` (a hierarchical 2D
+    mesh's ``tp_out`` size) builds a two-tier fabric, so the same period
+    graph caches and plans DIFFERENTLY per topology — the fabric is part of
+    the cache key. ``comp_hints`` (base-graph node name → FLOPs, part of
+    the cache key) prices the fn-carrying local math. Returns the winning
+    :class:`Plan` and a :class:`FixedPairing` to hand to
+    ``dataflow.optimize(planner=...)`` for the mb-merged graph."""
     from repro.hw import V5E
 
     hw = hw or V5E
-    fabric = lower_mod.fabric_from_hw(hw, max(tp, 2))
+    fabric = lower_mod.fabric_from_hw(hw, max(tp, 2), n_outer=n_outer)
     mb_candidates = tuple(sorted(set(int(m) for m in mb_candidates))) or (1,)
     key = None
     plan: Optional[Plan] = None

@@ -23,6 +23,14 @@ POD_AXIS = "pod"
 DATA_AXIS = "data"
 MODEL_AXIS = "model"
 
+# Hierarchical (2D) tensor parallelism: the model axis factors into a fast
+# intra-node ring × a slow inter-node axis (docs/topology.md). A shard index
+# along the composite axis is ``i_in * tp_out + i_out`` — ``tp_in`` major,
+# matching jax's tuple-PartitionSpec semantics for ``("tp_in", "tp_out")``.
+TP_IN_AXIS = "tp_in"
+TP_OUT_AXIS = "tp_out"
+TP_AXES_2D = (TP_IN_AXIS, TP_OUT_AXIS)
+
 
 def make_mesh(shape, axes) -> Mesh:
     """Version-portable ``jax.make_mesh`` with Auto axis types when the
@@ -35,13 +43,50 @@ def make_mesh(shape, axes) -> Mesh:
     return jax.make_mesh(shape, axes)
 
 
-def shard_map_axis_size(axis: str) -> int:
-    """Size of a named mesh axis from *inside* shard_map, version-portable:
-    newer jax has ``lax.axis_size``; older releases constant-fold
-    ``psum(1, axis)`` to the same value."""
+def make_tp_mesh(tp_in: int, tp_out: int, dp: int = 1) -> Mesh:
+    """A hierarchical-TP mesh: ``data × tp_in × tp_out`` with the model axis
+    factored into the fast intra-node ring (``tp_in``) × the slow inter-node
+    axis (``tp_out``). ``tp_out == 1`` still builds the 2D mesh (useful for
+    degenerate-factorization parity tests); callers wanting the flat ring use
+    ``make_mesh((dp, tp), ("data", "model"))`` as before."""
+    return make_mesh((dp, tp_in, tp_out), (DATA_AXIS,) + TP_AXES_2D)
+
+
+def tp_axes(mesh: Optional[Mesh]):
+    """The TP axis entry for PartitionSpecs / collective calls on ``mesh``:
+    the flat ``"model"`` string on 1D meshes, the composite
+    ``("tp_in", "tp_out")`` tuple on hierarchical meshes (tp_in major)."""
+    if mesh is not None and TP_IN_AXIS in mesh.axis_names \
+            and TP_OUT_AXIS in mesh.axis_names:
+        return TP_AXES_2D
+    return MODEL_AXIS
+
+
+def shard_map_axis_size(axis) -> int:
+    """Size of a named mesh axis (or product over a composite-axis tuple)
+    from *inside* shard_map, version-portable: newer jax has
+    ``lax.axis_size``; older releases constant-fold ``psum(1, axis)`` to the
+    same value."""
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= shard_map_axis_size(a)
+        return n
     if hasattr(jax.lax, "axis_size"):
         return jax.lax.axis_size(axis)
     return jax.lax.psum(1, axis)
+
+
+def shard_map_axis_index(axis):
+    """Flattened device index along ``axis`` from inside shard_map. For a
+    composite tuple the first member is major (index = i0·n1·… + i1·… + …),
+    consistent with jax's tuple-PartitionSpec shard order."""
+    if isinstance(axis, (tuple, list)):
+        idx = jax.lax.axis_index(axis[0])
+        for a in axis[1:]:
+            idx = idx * shard_map_axis_size(a) + jax.lax.axis_index(a)
+        return idx
+    return jax.lax.axis_index(axis)
 
 
 def shard_map(fn, *, mesh, in_specs, out_specs, check_vma: bool = True):
@@ -124,4 +169,7 @@ def dp_size(mesh: Optional[Mesh]) -> int:
 
 
 def tp_size(mesh: Optional[Mesh]) -> int:
-    return axis_size(mesh, MODEL_AXIS)
+    """Total TP degree — the flat model axis, or the product of the 2D
+    factors on a hierarchical mesh (the two are mutually exclusive)."""
+    return axis_size(mesh, MODEL_AXIS) * \
+        axis_size(mesh, TP_IN_AXIS) * axis_size(mesh, TP_OUT_AXIS)

@@ -690,6 +690,76 @@ def main():
                            train_grads(cfg, batch, rt_auto))
         check(f"train_grad.graph_vs_autodiff.remat.{mode}", err, 1e-6)
 
+    # ---------------- hierarchical 2D-mesh TP: flat ≡ tp_in × tp_out ------
+    # Full-model loss + train grads on a tp_in=2 × tp_out=4 mesh (per-axis
+    # collective composition, docs/topology.md) must match the flat 8-ring
+    # at 1e-6 per backend. The MoE config carries E=8 experts so BOTH
+    # meshes take the period-graph path: flat shards experts over the whole
+    # ring (E % 8 == 0), the 2D mesh takes grouped EP — experts over the
+    # slow tp_out axis only, replicated across tp_in.
+    mesh_flat8 = sharding.make_mesh((1, 8), ("data", "model"))
+    mesh_2d = sharding.make_tp_mesh(2, 4)
+    cfg_moe8 = cfg_moe.scaled(moe=dataclasses.replace(
+        cfg_moe.moe, num_experts=8))
+
+    def loss_and_grads(cfg_, batch_, rt_, mesh_):
+        model_ = build_model(cfg_, rt_)
+        params_ = model_.init(jax.random.key(0))
+        with sharding.use_mesh(mesh_):
+            l_, g_ = jax.jit(jax.value_and_grad(model_.loss))(
+                params_, batch_)
+        return float(l_), g_
+
+    for label, cfg_t, batch_t in (("dense", cfg, batch),
+                                  ("gqa", cfg_gqa2, batch),
+                                  ("moe", cfg_moe8, bmoe)):
+        for mode in ("barrier", "cais"):
+            rt_t = Runtime(compute_dtype="float32", remat=False,
+                           loss_chunk=16,
+                           tp=TPConfig(mode=mode, chunks=2,
+                                       graph_backward=True))
+            l_flat, g_flat = loss_and_grads(cfg_t, batch_t, rt_t, mesh_flat8)
+            l_2d, g_2d = loss_and_grads(cfg_t, batch_t, rt_t, mesh_2d)
+            check(f"topo2d.{label}.{mode}", abs(l_flat - l_2d), 1e-6)
+            check(f"topo2d.{label}.{mode}.train_grad",
+                  max_leaf_err(g_flat, g_2d), 1e-6)
+
+    # grouped-EP dispatch proof: on the 2D mesh the expert all-to-all must
+    # only ever cross the slow tp_out axis — the hierarchical backend
+    # re-enters a2a_expert_ffn with the concrete leg axis, so every
+    # non-composite axis the backend sees must be tp_out.
+    a2a_axes = []
+
+    class RecordingCAIS(CAISBackend):
+        name = "cais-record"
+
+        def a2a_expert_ffn(self, send, ffn, axis, cais):
+            a2a_axes.append(axis)
+            return super().a2a_expert_ffn(send, ffn, axis, cais)
+
+    register_backend(RecordingCAIS())
+    try:
+        rt_rec = Runtime(compute_dtype="float32", remat=False, loss_chunk=16,
+                         tp=TPConfig(mode="cais-record", chunks=2))
+        model_rec = build_model(cfg_moe8, rt_rec)
+        params_rec = model_rec.init(jax.random.key(0))
+        with sharding.use_mesh(mesh_2d):
+            l_rec = float(jax.jit(model_rec.loss)(params_rec, bmoe))
+    finally:
+        unregister_backend("cais-record")
+    rt_ref = Runtime(compute_dtype="float32", remat=False, loss_chunk=16,
+                     tp=TPConfig(mode="cais", chunks=2))
+    model_ref = build_model(cfg_moe8, rt_ref)
+    params_ref = model_ref.init(jax.random.key(0))
+    with sharding.use_mesh(mesh_2d):
+        l_ref = float(jax.jit(model_ref.loss)(params_ref, bmoe))
+    concrete = [a for a in a2a_axes if not isinstance(a, tuple)]
+    check("grouped_ep.dispatch.parity", abs(l_rec - l_ref), 1e-6)
+    check("grouped_ep.dispatch.tp_out_only",
+          0.0 if (concrete
+                  and all(a == sharding.TP_OUT_AXIS for a in concrete))
+          else 1.0)
+
     # ---------------- elastic resharding across meshes --------------------
     # Train 2 steps on a (2,4) mesh, checkpoint, restore onto (4,2) and
     # continue — losses must continue exactly (deliverable: elastic scaling).

@@ -15,7 +15,7 @@ from repro.plan import (CalibrationResult, PerfsimPlanner, PlanCache,
 FABRIC = Fabric(n=8)
 
 BENCH_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
-                          "BENCH_pr8.json")
+                          "BENCH_pr9.json")
 
 
 def _pass2(g):
@@ -257,3 +257,94 @@ def test_fabric_from_hw():
     assert f.bw == V5E.ici_bw
     assert f.alpha == V5E.hop_latency
     assert f.peak == V5E.peak_flops
+    assert not f.two_tier        # flat by default — PR-8-era call sites hold
+
+
+# ---------------------------------------------------------------------------
+# two-tier fabric (hierarchical 2D mesh — docs/topology.md)
+# ---------------------------------------------------------------------------
+
+
+def test_fabric_from_hw_two_tier():
+    from repro.hw import V5E
+
+    f = fabric_from_hw(V5E, 8, n_outer=4)
+    assert f.two_tier
+    assert f.n == 8 and f.n_outer == 4 and f.n_inner == 2
+    assert f.bw2 == V5E.dcn_bw
+    assert f.alpha2 == V5E.dcn_latency
+    assert f.bw2 < f.bw and f.alpha2 > f.alpha   # DCN slower than ICI
+
+
+def _two_tier(**kw):
+    import dataclasses
+
+    base = Fabric(n=8)
+    return dataclasses.replace(
+        base, n_outer=kw.pop("n_outer", 4),
+        bw2=kw.pop("bw2", base.bw / 20), alpha2=kw.pop("alpha2", 2e-4),
+        **kw)
+
+
+def test_two_tier_simulation_prices_slow_tier():
+    """The per-axis lowering decomposes each collective into inner + outer
+    legs; a slow outer tier must make the same graph strictly slower than
+    the flat ring, for both backends, and the cais advantage must hold
+    per tier."""
+    g = df.optimize(df.sublayer_graph())
+    f2 = _two_tier()
+    for backend in ("barrier", "cais"):
+        m_flat = simulate(g, FABRIC, policy_for_backend(backend))
+        m_2t = simulate(g, f2, policy_for_backend(backend))
+        assert m_2t > m_flat
+    # chunked rings lose to barriers on a latency-dominated outer tier
+    # unless the outer leg is chunked minimally — with a per-axis choice
+    # the cais schedule regains the win (the planner's job to find)
+    m_barrier = simulate(g, f2, policy_for_backend("barrier"))
+    m_cais = min(simulate(g, f2, policy_for_backend("cais"), num_chunks=c)
+                 for c in (None, 2, (2, 1), (4, 1)))
+    assert m_cais < m_barrier
+
+
+def test_two_tier_per_axis_chunking():
+    """(inner, outer) chunk tuples lower per-tier and price differently:
+    outer chunks multiply the expensive alpha2, inner chunks the cheap
+    alpha — so chunking the slow tier harder must cost more."""
+    g = df.optimize(df.sublayer_graph())
+    f2 = _two_tier()
+    policy = policy_for_backend("cais")
+    shapes = dict(value_shapes={"x": (8, 512, 1024)},
+                  weight_shapes={"w1": (1024, 1024), "w2": (1024, 1024),
+                                 "scale": (1024,)})
+    few_outer = simulate(g, f2, policy, num_chunks=(4, 2), **shapes)
+    many_outer = simulate(g, f2, policy, num_chunks=(4, 16), **shapes)
+    assert few_outer < many_outer
+
+
+def test_planner_diverges_between_tiers():
+    """ISSUE-9 acceptance: on an asymmetric fabric the perfsim planner must
+    choose a different plan for the two-tier topology than for the flat
+    ring of the same total size — the whole reason Fabric carries a second
+    tier at all."""
+    import dataclasses
+
+    g2 = _pass2(df.dual_sublayer_graph())
+    shapes = dict(value_shapes={"xa": (8, 512, 4096), "xb": (8, 512, 4096)},
+                  weight_shapes={"wa": (4096, 4096), "wb": (4096, 4096)})
+    asym = dataclasses.replace(Fabric(n=8), alpha=1e-7, n_outer=4,
+                               bw2=Fabric(n=8).bw / 20, alpha2=2e-4)
+    p_flat = search_pairing(g2, fabric=FABRIC, **shapes)
+    p_2t = search_pairing(g2, fabric=asym, **shapes)
+    assert p_flat.num_chunks != p_2t.num_chunks, (p_flat, p_2t)
+
+
+def test_two_tier_plan_roundtrips_through_cache_dict():
+    """A per-axis (inner, outer) chunk tuple must survive the plan-cache
+    JSON round trip (lists come back as tuples)."""
+    import json
+
+    from repro.plan.search import Plan
+
+    p = Plan(pairing=(("a", "b"),), num_chunks=(16, 2), num_microbatches=1,
+             makespan=1.0, greedy_makespan=2.0, backend="cais")
+    assert Plan.from_dict(json.loads(json.dumps(p.to_dict()))) == p
