@@ -13,7 +13,7 @@ graph-built backward (``TPConfig.graph_backward`` — the ``sp_period``
 custom VJP, docs/training.md) against plain JAX autodiff of the executed
 forward. With ``$REPRO_BENCH_JSON`` set, every row (including the
 subprocess cells) is dumped as the JSON baseline the CI slow-suite
-commits as ``BENCH_pr9.json`` — a ``meta.sublayer_env`` row records the shapes/mode
+commits as ``BENCH_pr10.json`` — a ``meta.sublayer_env`` row records the shapes/mode
 so baselines regenerated under different settings are not silently
 compared. Measured cells run on CPU-emulated virtual devices, where
 ``collective_permute`` chains serialize (no real bidirectional links), so
@@ -172,6 +172,34 @@ def _block_child() -> None:
     emit("moe.grouped_ep_vs_tp", moe_ts["grouped_ep"],
          f"flat_us={moe_ts['flat_tp']:.0f} "
          f"ratio={moe_ts['grouped_ep'] / moe_ts['flat_tp']:.2f}x")
+
+    # MoE train step through the graph-built backward (route / a2a_ffn /
+    # unroute adjoints with the aux cotangent, docs/training.md) vs JAX
+    # autodiff of the executed forward, with an explicit 2-microbatch split
+    # so pass 3 can pair one chain's backward grad-a2a/grad-RS against the
+    # other chain's forward gathers (cross-direction overlap_asym). E=8 so
+    # the flat 8-ring takes the period-graph MoE path (E % ring == 0).
+    import dataclasses as _dc
+
+    cfg_moe = cfg_moe.scaled(moe=_dc.replace(cfg_moe.moe, num_experts=8))
+    params_moe = tr.init_block(jax.random.key(5), "attn", cfg_moe,
+                               jnp.float32)
+    for mode in ("barrier", "cais"):
+        tpc_m = tp_mod.TPContext(mesh=mesh, backend=mode,
+                                 cais=CAISConfig(num_chunks=2))
+
+        def moe_grad_fn(tpc_):
+            def loss(x, p):
+                out, aux = tp_mod.sp_period(tpc_, x, [p], cfg_moe,
+                                            ("attn",), num_microbatches=2)
+                return jnp.sum(out * out) + jnp.sum(aux)
+            return jax.jit(jax.grad(loss, argnums=(0, 1)))
+
+        t_g = time_fn(moe_grad_fn(tpc_m), x, params_moe)
+        t_a = time_fn(moe_grad_fn(_dc.replace(tpc_m, graph_backward=False)),
+                      x, params_moe)
+        emit(f"train_step.moe_graph_vs_autodiff.{mode}", t_g,
+             f"autodiff_us={t_a:.0f} speedup={t_a / t_g:.2f}x")
 
 
 def run() -> None:

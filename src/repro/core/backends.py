@@ -58,6 +58,7 @@ import dataclasses
 from functools import lru_cache
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
@@ -170,6 +171,35 @@ class CollectiveBackend:
         g = lax.all_gather(d, axis, axis=1, tiled=True)
         return g @ wT, g
 
+    def grad_a2a_expert_ffn(self, send, gy, bwd_row: Callable, axis: str,
+                            cais: CAISConfig):
+        """Adjoint of ``a2a_expert_ffn`` (the ``bwd_a2a_ffn`` IR op):
+        re-run the dispatch all-to-all for ``send`` AND for the output
+        cotangent ``gy`` (Megatron-style recompute — the forward's routed
+        chunks are not stashed), apply the per-row expert VJP
+        ``bwd_row(chunk, gy_row) -> (d_chunk, dw_tuple)`` at the owning
+        device, then reverse-a2a the chunk cotangents back to their
+        senders. Expert weight grads stay LOCAL at the owner (summed over
+        the arriving rows) — EP weight gradients never ride a collective.
+        Default: monolithic all-to-alls (the barrier schedule)."""
+        if self.hierarchical(axis):
+            return self.hier_grad_a2a_expert_ffn(send, gy, bwd_row, axis,
+                                                 cais)
+        n = prim._axis_size(axis) if cais.interpret_n is None \
+            else cais.interpret_n
+        if n == 1:
+            d_rows, dw_rows = jax.vmap(bwd_row)(send, gy)
+            return d_rows, tuple(jnp.sum(a, axis=0) for a in dw_rows)
+
+        def a2a(t):
+            return lax.all_to_all(t, axis, split_axis=0, concat_axis=0,
+                                  tiled=False)
+
+        recv = a2a(send)
+        gyr = a2a(gy)
+        d_rows, dw_rows = jax.vmap(bwd_row)(recv, gyr)
+        return a2a(d_rows), tuple(jnp.sum(a, axis=0) for a in dw_rows)
+
     # -- asymmetric dual-stream overlap ----------------------------------
     def overlap_asymmetric(self, rs_args, ag_args, axis: str,
                            cais: CAISConfig):
@@ -246,6 +276,15 @@ class CollectiveBackend:
         g = self._outer_all_gather(d, axis[-1], cais)
         g = self._inner_all_gather(g, axis[0], cais)
         return g @ wT, g
+
+    def hier_grad_a2a_expert_ffn(self, send, gy, bwd_row, axis,
+                                 cais: CAISConfig):
+        """Grouped-EP adjoint: exactly like the forward, the grad
+        dispatch/combine traffic runs on ``tp_out`` only — grouped-EP
+        gradients never cross the fast intra-node ring (experts replicate
+        across ``tp_in``; the per-owner dw sums are completed by the
+        training wrapper's weight-grad psum over ``tp_in``)."""
+        return self.grad_a2a_expert_ffn(send, gy, bwd_row, axis[-1], cais)
 
     def hier_overlap_asymmetric(self, rs_args, ag_args, axis,
                                 cais: CAISConfig):
@@ -471,6 +510,17 @@ class CAISBackend(CollectiveBackend):
         cais = self._resolve(cais, self._nbytes(d) * n, n)
         g = prim.ring_all_gather(d, axis, cais)
         return g @ wT, g
+
+    def grad_a2a_expert_ffn(self, send, gy, bwd_row, axis, cais):
+        if self.hierarchical(axis):
+            return self.hier_grad_a2a_expert_ffn(send, gy, bwd_row, axis,
+                                                 cais)
+        # interleaved per-offset ± schedule mirroring the forward a2a; the
+        # chunking is structural (one (row, cotangent) pair per offset —
+        # splitting a row along C would break the E_loc·cap expert
+        # segmentation), so no _resolve here; the planner prices the 2×
+        # dispatch payload instead (plan/lower.py)
+        return prim.grad_a2a_expert_ffn(send, gy, bwd_row, axis, cais)
 
     def overlap_asymmetric(self, rs_args, ag_args, axis, cais):
         if self.hierarchical(axis):

@@ -82,6 +82,17 @@ Fused ops (produced by ``optimize``, executed via the backend):
     gathered cotangent for the weight-gradient GEMM. Emitted by
     :func:`build_training_graph` (never by the forward builders), executed
     via ``CollectiveBackend.grad_ag_gemm``.
+``bwd_a2a_ffn``
+    Backward-only: the adjoint of ``a2a_ffn`` — re-dispatch the forward
+    send buffer together with the output cotangent to each expert owner
+    (forward-direction all-to-all), run the per-row VJP of the expert FFN
+    there, return ``d(recv)`` to the senders (reverse all-to-all) and keep
+    the local expert-weight grads on the owner. Emitted by
+    :func:`build_training_graph`, executed via
+    ``CollectiveBackend.grad_a2a_expert_ffn`` (the ``cais`` backend
+    interleaves the ±offset dispatch/return permutes with the VJP GEMMs;
+    the hierarchical composition keeps grouped-EP grads off the fast
+    ``tp_in`` axis).
 
 A worked trace of a 2-block period through every pass lives in
 ``docs/architecture.md``; ``docs/backends.md`` documents the backend methods
@@ -137,6 +148,7 @@ from repro.core.primitives import CAISConfig
 # fused_rs_ln          (x: feat[, res:seq])  (w1, scale)     (seq zn, seq z)
 # overlap_asym         (x_rs: feat, x_ag: seq) (w_rs, w_ag...) (seq, feat...)
 # bwd_ag_gemm          (dy: seq)             wT (d, F/n)     (feat dx, full dy)
+# bwd_a2a_ffn          (send, dy) send-shaped (expert ws...)  (d_send, dw...)
 
 VALID_OPS = {
     "input", "gemm_col", "gemm_row", "allgather", "reduce_scatter",
@@ -144,31 +156,45 @@ VALID_OPS = {
     "route", "unroute", "a2a_ffn",
     "ag_gemm", "ag_gemm_multi", "gemm_rs", "gemm_ar", "fused_rs_ln_ag",
     "fused_rs_ln_ag_multi", "fused_rs_ln", "overlap_asym",
-    "bwd_ag_gemm",
+    "bwd_ag_gemm", "bwd_a2a_ffn",
 }
 
 # Declared adjoint vocabulary (docs/training.md): the backward-graph builder
 # (:func:`build_training_graph`) knows how to emit adjoint nodes for exactly
-# these forward ops — the op set a dense period graph contains after passes
-# 1/1b/2. Each entry maps a forward op to the IR ops its adjoint emits, so
+# these forward ops — every op the model builders can leave in a period
+# graph after passes 1/1b/2, MoE routing and the ragged/decode layouts
+# included. Each entry maps a forward op to the IR ops its adjoint emits, so
 # the backward is itself a dataflow graph the optimizer (and the perfsim
 # planner) schedules: ``ag_gemm[_multi]`` ↔ a grad reduce-scatter
 # (``gemm_rs`` over the transposed weight), ``gemm_rs`` ↔ a grad all-gather
-# (``bwd_ag_gemm``), ``fused_rs_ln_ag[_multi]`` ↔ the fused composition of
-# both around the norm's VJP. Graphs containing any other op (MoE routing,
-# ``gemm_ar``, raw collectives) report ``supports_backward() == False`` and
-# keep JAX autodiff of the executed forward graph.
+# (``bwd_ag_gemm``), ``fused_rs_ln_ag[_multi]`` / ``fused_rs_ln`` ↔ the
+# fused composition of both around the norm's VJP, ``a2a_ffn`` ↔ the
+# reverse expert all-to-all (``bwd_a2a_ffn``), ``route``/``unroute`` ↔
+# local ``jax.vjp`` of the routing closures (the aux-loss side-output's
+# cotangent seeds the router-logit grads), ``gemm_ar`` ↔ purely local math
+# (its output is replicated, so dx/dw need no collective), ``gemm_col`` ↔ a
+# grad allreduce (a backward ``gemm_ar`` over the transposed weight — the
+# sequence-parallel-off layout's backbone). Graphs containing any other op
+# (raw collectives, pass-3 ``overlap_asym``) report
+# ``supports_backward() == False`` and keep JAX autodiff of the executed
+# forward graph.
 ADJOINTS = {
     "input": (),
     "add": (), "residual": (),              # gradient fan-out, no new nodes
     "layernorm": ("custom",),               # norm VJP (local math)
     "custom": ("custom",),                  # jax.vjp of the node's fn
+    "route": ("custom",),                   # jax.vjp of the routing closure
+    "unroute": ("custom",),                 # the route adjoint's dual
+    "a2a_ffn": ("bwd_a2a_ffn",),            # reverse expert all-to-all
     "ag_gemm": ("custom", "gemm_rs", "allgather"),
     "ag_gemm_multi": ("custom", "gemm_rs", "allgather"),
     "gemm_rs": ("bwd_ag_gemm", "custom"),
+    "gemm_ar": ("custom",),                 # replicated out: local dx/dw
+    "gemm_col": ("gemm_ar", "custom"),      # grad allreduce through w^T
     "fused_rs_ln_ag": ("custom", "gemm_rs", "bwd_ag_gemm", "allgather"),
     "fused_rs_ln_ag_multi": ("custom", "gemm_rs", "bwd_ag_gemm",
                              "allgather"),
+    "fused_rs_ln": ("custom", "bwd_ag_gemm"),
 }
 
 # local-math ops whose semantics live in the node's `fn`
@@ -656,6 +682,24 @@ def execute(g: Graph, values: Dict[str, jnp.ndarray],
             dx_, dyf = (be.grad_ag_gemm(ins[0], ws[0], axis, cais)
                         if dist else (ins[0] @ ws[0], ins[0]))
             env[n.outputs[0]], env[n.outputs[1]] = dx_, dyf
+        elif n.op == "bwd_a2a_ffn":
+            # adjoint of a2a_ffn: re-dispatch (send-row, cotangent-row)
+            # pairs to the expert owners, per-row VJP of the expert fn
+            # there, return d(recv) to the senders; the owner keeps its
+            # local expert-weight grads. outputs = (d_send, dw...)
+            def _row_vjp(chunk, gyc, _n=n, _ws=tuple(ws)):
+                _, pull = jax.vjp(lambda c, *w: _n.fn(c, *w), chunk, *_ws)
+                gr = pull(gyc)
+                return gr[0], tuple(gr[1:])
+            if dist:
+                dsend, dws_ = be.grad_a2a_expert_ffn(ins[0], ins[1],
+                                                     _row_vjp, axis, cais)
+            else:
+                d_rows, dw_rows = jax.vmap(_row_vjp)(ins[0], ins[1])
+                dsend = d_rows
+                dws_ = tuple(jnp.sum(a, axis=0) for a in dw_rows)
+            for name, val in zip(n.outputs, (dsend,) + tuple(dws_)):
+                env[name] = val
         elif n.op == "gemm_ar":
             env[n.name] = (be.gemm_ar(ins[0], ws[0], axis, cais)
                            if dist else ins[0] @ ws[0])
@@ -828,9 +872,13 @@ def grad_input_name(value: str) -> str:
 
 def supports_backward(g: Graph) -> bool:
     """True iff every node's op has a declared adjoint (:data:`ADJOINTS`) —
-    the dense period-graph op set after passes 1/1b/2. MoE routing,
-    ``gemm_ar`` (ragged/decode TP) and pass-3 ``overlap_asym`` have none;
-    callers keep JAX autodiff of the executed forward graph for those."""
+    every op the model builders leave in a period graph after passes
+    1/1b/2: the dense vocabulary, MoE routing (``route``/``a2a_ffn``/
+    ``unroute``), ``gemm_ar``/``gemm_col`` (ragged/decode and
+    sequence-parallel-off layouts). Raw collectives and pass-3
+    ``overlap_asym`` have none; callers keep JAX autodiff of the executed
+    forward graph for those (``sp_period`` warns once when that fallback
+    fires under ``graph_backward=True``)."""
     return all(n.op in ADJOINTS for n in g.nodes)
 
 
@@ -896,6 +944,11 @@ def _dw(act, gout):
     """Per-use weight gradient: contract activation (B, S, in) against the
     output cotangent (B, S, out) over batch×seq → (in, out)."""
     return jnp.einsum("bsi,bsj->ij", act, gout)
+
+
+def _gemm_t(gy, wT):
+    """dx leg of a plain GEMM adjoint: cotangent @ transposed weight."""
+    return gy @ wT
 
 
 def build_training_graph(g: Graph, norm: str = "rmsnorm") -> TrainingGraph:
@@ -979,7 +1032,12 @@ def build_training_graph(g: Graph, norm: str = "rmsnorm") -> TrainingGraph:
                 fn=_norm_vjp(norm)))
             take(xin, f"d.{xin}@{an}")
             add_dw(scale, f"{_DW_PREFIX}{an}.{scale}")
-        elif n.op == "custom":
+        elif n.op in _FN_OPS:
+            # custom, route, unroute: jax.vjp of the node's local fn. For
+            # route the output triple is (send, combine, aux) — the aux
+            # load-balance statistic is a first-class graph output, so its
+            # cotangent (seeded from d.<aux>) rides the same VJP into the
+            # router-logit gradients.
             gys = [finalize(v) for v in n.outputs]
             if all(q is None for q in gys):
                 continue
@@ -994,6 +1052,18 @@ def build_training_graph(g: Graph, norm: str = "rmsnorm") -> TrainingGraph:
                 take(v, f"d.{v}@{an}")
             for w in n.weights:
                 add_dw(w, f"{_DW_PREFIX}{an}.{w}")
+        elif n.op == "a2a_ffn":
+            gy = finalize(n.name)
+            if gy is None:
+                continue
+            sn = n.inputs[0]
+            dsend = f"d.{sn}@{an}"
+            dw_names = tuple(f"{_DW_PREFIX}{an}.{w}" for w in n.weights)
+            nodes.append(Node(an, "bwd_a2a_ffn", (sn, gy), n.weights,
+                              outputs=(dsend,) + dw_names, fn=n.fn))
+            take(sn, dsend)
+            for w, dwn in zip(n.weights, dw_names):
+                add_dw(w, dwn)
         elif n.op in ("ag_gemm", "ag_gemm_multi"):
             gys = [finalize(v) for v in n.outputs]
             if all(q is None for q in gys):
@@ -1026,6 +1096,39 @@ def build_training_graph(g: Graph, norm: str = "rmsnorm") -> TrainingGraph:
             take(hin, dh)
             nodes.append(Node(f"adj.dw.{n.name}.{w1}", "custom",
                               (hin, dyf),
+                              outputs=(f"{_DW_PREFIX}{an}.{w1}",), fn=_dw))
+            add_dw(w1, f"{_DW_PREFIX}{an}.{w1}")
+        elif n.op == "gemm_ar":
+            # y = psum(x_feat @ w_row) is replicated, so the adjoint is
+            # purely local: dx = dy @ w^T lands feature-sharded, dw is the
+            # local row-shard's contraction — no collective either way
+            # (decode/ragged S, incl. S=1: nothing here depends on S).
+            gy = finalize(n.name)
+            if gy is None:
+                continue
+            hin, w1 = n.inputs[0], n.weights[0]
+            dh = f"d.{hin}@{an}"
+            nodes.append(Node(an, "custom", (gy,), (w1 + "^T",),
+                              outputs=(dh,), fn=_gemm_t))
+            take(hin, dh)
+            nodes.append(Node(f"adj.dw.{n.name}.{w1}", "custom",
+                              (hin, gy),
+                              outputs=(f"{_DW_PREFIX}{an}.{w1}",), fn=_dw))
+            add_dw(w1, f"{_DW_PREFIX}{an}.{w1}")
+        elif n.op == "gemm_col":
+            # sequence-parallel-off layout: x is replicated, y = x @ w_col
+            # is feature-sharded. dx needs the cross-shard sum — emitted as
+            # a backward ``gemm_ar`` (grad allreduce through w^T, dispatched
+            # via the backend); dw is local per column shard.
+            gy = finalize(n.name)
+            if gy is None:
+                continue
+            xin, w1 = n.inputs[0], n.weights[0]
+            dxv = f"d.{xin}@{an}"
+            nodes.append(Node(dxv, "gemm_ar", (gy,), (w1 + "^T",)))
+            take(xin, dxv)
+            nodes.append(Node(f"adj.dw.{n.name}.{w1}", "custom",
+                              (xin, gy),
                               outputs=(f"{_DW_PREFIX}{an}.{w1}",), fn=_dw))
             add_dw(w1, f"{_DW_PREFIX}{an}.{w1}")
         elif n.op in ("fused_rs_ln_ag", "fused_rs_ln_ag_multi"):
@@ -1076,6 +1179,43 @@ def build_training_graph(g: Graph, norm: str = "rmsnorm") -> TrainingGraph:
                                   outputs=(f"{_DW_PREFIX}{an}.{w}",),
                                   fn=_dw))
                 add_dw(w, f"{_DW_PREFIX}{an}.{w}")
+        elif n.op == "fused_rs_ln":
+            # the MoE router seam (no trailing gather): outputs (zn, z).
+            # d(zn) arrives from the route/unroute/dense-residual adjoints,
+            # d(z) from the next block's residual skip; norm VJP joins them
+            # and the RS leg's adjoint (bwd_ag_gemm) carries dz back.
+            znv, z = n.outputs
+            dzn = finalize(znv)
+            dz_ext = finalize(z)
+            if dzn is None and dz_ext is None:
+                continue
+            hin = n.inputs[0]
+            res = n.inputs[1] if len(n.inputs) > 1 else None
+            w1, scale = n.weights[0], n.weights[1]
+            if dzn is not None:
+                dz_n = f"dznorm.{n.name}"
+                dscale = f"{_DW_PREFIX}{an}.{scale}"
+                nodes.append(Node(f"adj.ln.{n.name}", "custom", (z, dzn),
+                                  (scale,), outputs=(dz_n, dscale),
+                                  fn=_norm_vjp(norm)))
+                add_dw(scale, dscale)
+                if dz_ext is not None:
+                    dz = f"dz.{n.name}"
+                    nodes.append(Node(dz, "add", (dz_n, dz_ext)))
+                else:
+                    dz = dz_n
+            else:
+                dz = dz_ext
+            if res is not None:
+                take(res, dz)
+            dh, dyf = f"d.{hin}@{an}", f"dfull.{n.name}"
+            nodes.append(Node(an, "bwd_ag_gemm", (dz,), (w1 + "^T",),
+                              outputs=(dh, dyf)))
+            take(hin, dh)
+            nodes.append(Node(f"adj.dw.{n.name}.{w1}", "custom",
+                              (hin, dyf),
+                              outputs=(f"{_DW_PREFIX}{an}.{w1}",), fn=_dw))
+            add_dw(w1, f"{_DW_PREFIX}{an}.{w1}")
         else:  # pragma: no cover — ADJOINTS gate above is exhaustive
             raise GraphError(f"unhandled adjoint for op {n.op!r}")
 

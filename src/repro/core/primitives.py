@@ -415,6 +415,55 @@ def _dus_row(x: jnp.ndarray, row: jnp.ndarray, idx) -> jnp.ndarray:
     return lax.dynamic_update_index_in_dim(x, row, idx, axis=0)
 
 
+def grad_a2a_expert_ffn(send: jnp.ndarray, gy: jnp.ndarray,
+                        bwd_row: Callable, axis: str,
+                        cais: CAISConfig = CAISConfig()):
+    """CAIS-decomposed adjoint of :func:`a2a_expert_ffn`.
+
+    Mirrors the forward's interleaved per-offset schedule: each step the
+    grad-dispatch permute (+o direction) carries the (send row, output
+    cotangent row) pair to the owning expert, the per-row expert VJP runs
+    on the pair that just arrived, and the chunk-cotangent combine permute
+    (−o direction) returns the previous result to its sender — dispatch
+    and combine again ride OPPOSITE link directions every step. The
+    dispatch payload is 2× the forward's (row + cotangent travel
+    together); the planner prices both directions (plan/lower.py).
+
+    ``bwd_row(chunk, gy_row) -> (d_chunk, dw_tuple)`` is the per-row
+    expert VJP built by the executor. Expert weight grads accumulate
+    LOCALLY at the owner — they never ride a collective. Returns
+    ``(d_send, dw_tuple)`` with ``d_send`` shaped like ``send``.
+    """
+    n = cais.interpret_n or _axis_size(axis)
+    if n == 1:
+        d_rows, dw_rows = jax.vmap(bwd_row)(send, gy)
+        return d_rows, tuple(jnp.sum(a, axis=0) for a in dw_rows)
+    i = lax.axis_index(axis)
+
+    def perm_for(offset: int):
+        return [(s, (s + offset) % n) for s in range(n)]
+
+    # local row: my tokens routed to my own experts (no wire)
+    d0, dws = bwd_row(_take_row(send, i), _take_row(gy, i))
+    d_send = jnp.zeros_like(send)
+    d_send = _dus_row(d_send, d0, i)
+
+    for o in range(1, n):
+        # same ± alternation as the forward so directions stay balanced
+        off = o if not cais.bidirectional else ((o + 1) // 2 if o % 2
+                                                else -(o // 2))
+        dst = (i + off) % n
+        # grad-dispatch: the row AND its output cotangent travel together
+        arr_c = lax.ppermute(_take_row(send, dst), axis, perm_for(off))
+        arr_g = lax.ppermute(_take_row(gy, dst), axis, perm_for(off))
+        d_chunk, dw_o = bwd_row(arr_c, arr_g)  # my experts' VJP
+        # chunk cotangent travels the opposite direction back to sender
+        returned = lax.ppermute(d_chunk, axis, perm_for(-off))
+        d_send = _dus_row(d_send, returned, dst)
+        dws = tuple(a + b for a, b in zip(dws, dw_o))
+    return d_send, dws
+
+
 # ---------------------------------------------------------------------------
 # Fused sub-layer: GEMM-RS + LN + AG-GEMM (the paper's L1–L4 chain)
 # ---------------------------------------------------------------------------

@@ -35,6 +35,7 @@ plan_microbatches`. See ``docs/architecture.md`` for the full layer map.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass
 from typing import TYPE_CHECKING, Callable, Dict, Optional, Sequence, Union
 
@@ -75,8 +76,9 @@ class TPContext:
     over pairings/chunks/microbatch splits, memoized in the plan cache).
     ``hw`` is the α-β target-hardware model the microbatch planner and the
     perfsim fabric read — injectable so tests can pin behaviour with a
-    scaled-down fabric. ``graph_backward`` routes dense-period training
-    gradients through the graph-built custom VJP (``docs/training.md``)
+    scaled-down fabric. ``graph_backward`` routes period training
+    gradients — dense, MoE, and the replicated-activation decode/ragged
+    layout — through the graph-built custom VJP (``docs/training.md``)
     instead of JAX autodiff of the executed forward."""
 
     mesh: Mesh
@@ -547,7 +549,9 @@ def sp_moe_ffn(tpc: TPContext, x, norm_scale, params, cfg,
         if m.dense_residual_d_ff:
             from repro.models.ffn import mlp_forward
             out = out + mlp_forward(params["dense"], xn, cfg.act)
-        return out, aux
+        # aux leaves sharded over (batch, model) — the per-shard statistics
+        # genuinely differ per data shard (same convention as sp_period)
+        return out, aux[None]
 
     dtype = x.dtype
     wu = params["w_up"].astype(dtype)
@@ -560,7 +564,7 @@ def sp_moe_ffn(tpc: TPContext, x, norm_scale, params, cfg,
         tpc, local,
         in_specs=[(BATCH, M, None), (None,), (None, None),
                   e_spec, e_spec, e_spec],
-        out_specs=[(BATCH, M, None), (M,)])(
+        out_specs=[(BATCH, M, None), (BATCH, M)])(
             x, norm_scale, params["router"], wu, wg, wd)
     return out, jnp.mean(aux)
 
@@ -823,16 +827,23 @@ def resolve_microbatches(tpc: TPContext, x,
 def _core_comp_hints(cfg, kinds: Sequence[str], batch: int, seq: int
                      ) -> Dict[str, float]:
     """Planner ``comp_hints`` for a single-chain period graph: the attention
-    cores (``b{i}.o`` custom nodes) are the only op class whose cost the
-    lowering cannot read off GEMM weight shapes, so their FLOPs come from
-    :func:`repro.models.counting.attention_core_flops`. Keys are base-graph
-    node names (per-replica ``batch``, like the planner's value shapes);
+    cores (``b{i}.o`` custom nodes) and the routed expert FFNs (``b{i}.eout``
+    a2a_ffn nodes) are the op classes whose cost the lowering cannot read
+    off GEMM weight shapes, so their FLOPs come from
+    :mod:`repro.models.counting`. Keys are base-graph node names
+    (per-replica ``batch``, like the planner's value shapes);
     :func:`repro.plan.search.microbatch_comp_hints` re-prefixes and
-    re-scales them per microbatch chain."""
-    from repro.models.counting import attention_core_flops
+    re-scales them per microbatch chain, and :func:`_bwd_planner` doubles
+    each hint for the matching ``adj.`` node."""
+    from repro.models.counting import attention_core_flops, expert_ffn_flops
 
     flops = attention_core_flops(cfg, batch, seq)
-    return {f"b{i}.o": flops for i in range(len(kinds))}
+    hints = {f"b{i}.o": flops for i in range(len(kinds))}
+    if cfg.moe is not None:
+        ef = expert_ffn_flops(cfg, batch, seq)
+        hints.update({f"b{i}.eout": ef
+                      for i, k in enumerate(kinds) if k == "moe"})
+    return hints
 
 
 def _plan_period(tpc: TPContext, base: df.Graph, weights, x,
@@ -887,7 +898,10 @@ def _bwd_planner(tpc: TPContext, tg: "df.TrainingGraph", weights, x,
     per = (max(b_loc // mb, 1), int(x.shape[1]), int(x.shape[2]))
     chains = ["x"] if mb == 1 else [f"mb{i}.x" for i in range(mb)]
     vshapes = {c: per for c in chains}
-    vshapes.update({gi: per for gi in tg.grad_inputs})
+    # cotangent seeds are activation-shaped except the MoE aux-loss
+    # statistics, which are scalar side-outputs
+    vshapes.update({gi: ((1,) if gi.endswith("aux") else per)
+                    for gi in tg.grad_inputs})
     wshapes = {k: tuple(v.shape) for k, v in weights.items()}
     wshapes.update(df.derived_weight_shapes(tg.graph, wshapes))
     bh = {}
@@ -902,6 +916,27 @@ def _bwd_planner(tpc: TPContext, tg: "df.TrainingGraph", weights, x,
                                        n_outer=tpc.topology[1]),
         backend=tpc.mode, num_microbatches=mb,
         cache=plan_mod.default_cache(), comp_hints=bh or None)
+
+
+# op-sets already warned about, so a training loop re-tracing the same
+# period shape doesn't repeat the message every step
+_GRAPH_BWD_WARNED: set = set()
+
+
+def _warn_graph_bwd_fallback(bad_ops: Sequence[str]) -> None:
+    """Warn ONCE per offending op-set when ``graph_backward=True`` cannot
+    build the backward graph and falls back to JAX autodiff of the executed
+    forward — naming the ops without adjoints so the fallback is never
+    silent."""
+    key = tuple(bad_ops)
+    if key in _GRAPH_BWD_WARNED:
+        return
+    _GRAPH_BWD_WARNED.add(key)
+    warnings.warn(
+        "TPConfig(graph_backward=True): period graph has no declared "
+        f"adjoint for op(s) {', '.join(repr(o) for o in bad_ops)}; "
+        "falling back to JAX autodiff of the executed forward "
+        "(docs/training.md)", UserWarning, stacklevel=3)
 
 
 def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str], *,
@@ -932,8 +967,8 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str], *,
     ``"auto"`` therefore never splits an MoE period — an explicit integer
     is the opt-in that accepts the changed aux term.
 
-    When ``tpc.graph_backward`` is set (the default) and the period is a
-    dense sequence-sharded one whose ops all declare adjoints
+    When ``tpc.graph_backward`` is set (the default) and every op of the
+    pass-2-fused period declares an adjoint
     (:func:`repro.core.dataflow.supports_backward`), execution is wrapped in
     ``jax.custom_vjp``: the backward is BUILT as a dataflow graph too
     (:func:`repro.core.dataflow.build_training_graph` over the pass-2-fused
@@ -941,9 +976,15 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str], *,
     backward ``shard_map`` — so with ``num_microbatches ≥ 2`` pass 3 pairs
     one chain's backward grad reduce-scatter against another chain's
     forward-recompute gather (``overlap_asym`` spanning fwd and bwd), the
-    overlap class the paper wins its training speedup from. MoE and
-    non-seq-sharded periods fall back to JAX autodiff of the executed
-    forward. See ``docs/training.md``.
+    overlap class the paper wins its training speedup from. This covers
+    MoE periods (``route``/``a2a_ffn``/``unroute`` adjoints, with the
+    aux-loss cotangent seeded per chain) and the replicated-activation
+    decode/ragged layout (``seq_sharded=False``: ``gemm_col``/``gemm_ar``
+    adjoints, S=1 included). A period whose graph still carries an op with
+    no adjoint falls back to JAX autodiff of the executed forward with a
+    once-per-op-set ``UserWarning`` naming the ops; the non-explicit
+    ``auto`` backend always takes the autodiff path (there is no explicit
+    backward schedule to build for it). See ``docs/training.md``.
 
     x: (B, S, d), sequence-sharded when ``seq_sharded`` (the training path)
     or replicated when not (the decode/ragged-S allreduce path, dense blocks
@@ -967,9 +1008,16 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str], *,
     def local(x, *ws):
         wmap = dict(zip(names, ws))
         if mb == 1:
-            return df.execute(graph, {"x": x}, wmap, axis=M,
-                              cais=tpc.cais, norm=norm_kind,
-                              backend=tpc.backend)
+            res = df.execute(graph, {"x": x}, wmap, axis=M,
+                             cais=tpc.cais, norm=norm_kind,
+                             backend=tpc.backend)
+            if n_aux:
+                # aux leaves the shard_map sharded over (batch, model): the
+                # per-shard statistics genuinely differ per data shard, so a
+                # replicated out-spec would be a lie (check_vma=False never
+                # verifies it) and its autodiff transpose ill-defined
+                res = tuple(res[:1]) + tuple(a[None] for a in res[1:])
+            return res
         res = df.execute(
             graph,
             {f"mb{i}.x": xi
@@ -978,16 +1026,17 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str], *,
             backend=tpc.backend)
         per = 1 + n_aux
         out = jnp.concatenate([res[i * per] for i in range(mb)], axis=0)
-        auxes = tuple(sum(res[i * per + 1 + j] for i in range(mb)) / mb
-                      for j in range(n_aux))
+        auxes = tuple(
+            (sum(res[i * per + 1 + j] for i in range(mb)) / mb)[None]
+            for j in range(n_aux))
         return (out,) + auxes
 
     x_spec = (BATCH, M, None) if o.seq_sharded else (BATCH, None, None)
     in_specs = [x_spec] + [specs[k] for k in names]
-    out_specs = [x_spec] + [(M,)] * n_aux
+    out_specs = [x_spec] + [(BATCH, M)] * n_aux
     fwd_call = _smap(tpc, local, in_specs, out_specs)
 
-    use_graph_bwd = (tpc.graph_backward and o.seq_sharded and not aux_vals
+    use_graph_bwd = (tpc.graph_backward
                      and getattr(tpc.backend, "explicit", True))
     if use_graph_bwd:
         # the backward is declared against the pass-2-fused forward (it
@@ -995,7 +1044,10 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str], *,
         # on the MERGED fwd+bwd graph so pairing can span both directions
         g2 = df.fuse_sublayer_chain(df.fuse_shared_gather(
             df.fuse_compute_aware(merged)))
-        use_graph_bwd = df.supports_backward(g2)
+        bad = sorted({n.op for n in g2.nodes if n.op not in df.ADJOINTS})
+        if bad:
+            _warn_graph_bwd_fallback(bad)
+            use_graph_bwd = False
     if not use_graph_bwd:
         res = fwd_call(x, *weights.values())
         aux = jnp.float32(0.0)
@@ -1019,6 +1071,13 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str], *,
     tp_names = tuple(a for a in tp_names if a in tpc.mesh.axis_names)
     grad_psum_axes = {}
     for k in names:
+        if not o.seq_sharded:
+            # replicated-activation layout (decode/ragged): every device
+            # sees the full batch×seq, so replicated-weight grads are
+            # already complete — a psum over the TP axes would overcount
+            # by the ring size
+            grad_psum_axes[k] = ()
+            continue
         mentioned = set()
         for e in specs[k]:
             if isinstance(e, (tuple, list)):
@@ -1027,13 +1086,23 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str], *,
                 mentioned.add(e)
         grad_psum_axes[k] = tuple(a for a in tp_names if a not in mentioned)
 
-    def local_bwd(x, gy, *ws):
+    def local_bwd(x, gy, *rest):
+        gauxes, ws = rest[:n_aux], rest[n_aux:]
         wmap = df.derived_weights(bwd_graph, dict(zip(names, ws)))
         vals = {}
         xs = jnp.split(x, mb, axis=0) if mb > 1 else [x]
         gys = jnp.split(gy, mb, axis=0) if mb > 1 else [gy]
         vals.update(zip(chains, xs))
-        vals.update(zip(tg.grad_inputs, gys))
+        # cotangent seeds in graph-output order: per chain (d.out,
+        # d.aux...). The fwd reports the mean of per-chain aux values, so
+        # each chain's aux seed carries 1/mb of the aux cotangent; gauxes
+        # arrive (batch, model)-sharded, so ga[0] is exactly this device's
+        # slice of the aux cotangent — no replication ambiguity.
+        seeds = []
+        for i in range(mb):
+            seeds.append(gys[i])
+            seeds.extend(ga[0] / mb for ga in gauxes)
+        vals.update(zip(tg.grad_inputs, seeds))
         res = df.execute(bwd_graph, vals, wmap, axis=M, cais=tpc.cais,
                          norm=norm_kind, backend=tpc.backend)
         got = dict(zip(bwd_graph.outputs, res))
@@ -1053,23 +1122,28 @@ def sp_period(tpc: TPContext, x, params_seq, cfg, kinds: Sequence[str], *,
         return (dx.astype(x.dtype),) + tuple(dws)
 
     bwd_call = _smap(tpc, local_bwd,
-                     [x_spec, x_spec] + [specs[k] for k in names],
+                     [x_spec, x_spec] + [(BATCH, M)] * n_aux
+                     + [specs[k] for k in names],
                      [x_spec] + [specs[k] for k in names])
 
     @jax.custom_vjp
     def period(x, *ws):
-        return fwd_call(x, *ws)[0]
+        return fwd_call(x, *ws)
 
     def period_fwd(x, *ws):
-        return fwd_call(x, *ws)[0], (x, ws)
+        return fwd_call(x, *ws), (x, ws)
 
-    def period_bwd(saved, gy):
+    def period_bwd(saved, gys):
         xr, ws = saved
-        out = bwd_call(xr, gy, *ws)
+        out = bwd_call(xr, gys[0], *gys[1:], *ws)
         return (out[0],) + tuple(out[1:])
 
     period.defvjp(period_fwd, period_bwd)
-    return period(x, *tuple(weights.values())), jnp.float32(0.0)
+    res = period(x, *tuple(weights.values()))
+    aux = jnp.float32(0.0)
+    for a in res[1:]:
+        aux = aux + jnp.mean(a)
+    return res[0], aux
 
 
 def _serve_attention_core_fn(cfg, tp: int, window: int = 0,

@@ -142,7 +142,11 @@ def param_pspec(path: Tuple[str, ...], shape, cfg: ArchConfig, mesh: Mesh,
             n_out = sharding.axis_size(mesh, sharding.TP_OUT_AXIS)
             if n_out > 1 and E % n_out == 0:
                 # grouped EP (docs/topology.md): experts over the slow
-                # tp_out axis only; tp_in's share is the expert hidden dim
+                # tp_out axis only; tp_in's share is the expert hidden dim.
+                # The graph-path backward mirrors this placement:
+                # hier_grad_a2a_expert_ffn keeps expert-grad all-to-alls on
+                # tp_out, and dw partials complete over tp_in only
+                # (docs/training.md)
                 spec = [sharding.TP_OUT_AXIS, None, None]
                 spec[hid] = sharding.TP_IN_AXIS
                 return fin(spec, (1, 2))

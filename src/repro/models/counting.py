@@ -48,3 +48,21 @@ def attention_core_flops(cfg, batch: int, seq: int) -> float:
     are O(B·H·S·dh), two orders below the S² terms at planner scales)."""
     return 2.0 * batch * cfg.num_heads * float(seq) * seq * \
         cfg.resolved_head_dim
+
+
+def expert_ffn_flops(cfg, batch: int, seq: int) -> float:
+    """FLOPs of one MoE block's routed expert compute (the ``b{i}.eout``
+    ``a2a_ffn`` node), the second planner ``comp_hints`` source: the
+    dispatch buffers carry ``E·cap`` padded rows with
+    ``cap = B·S·top_k·capacity_factor / E``, and every row runs the
+    up[+gate]+down expert GEMMs at 2·d·d_ff each. Router and
+    dispatch/combine einsums are dropped (O(T·E·cap), below the d·d_ff
+    terms at planner scales). Returns 0 for dense configs."""
+    m = cfg.moe
+    if m is None:
+        return 0.0
+    from repro.models.layers import gated
+
+    rows = batch * float(seq) * m.top_k * m.capacity_factor
+    n_gemms = 3 if gated(cfg.act) else 2
+    return rows * n_gemms * 2.0 * cfg.d_model * cfg.d_ff

@@ -68,7 +68,16 @@ def init_moe(key, cfg: ArchConfig, dtype=jnp.float32):
 def _top2_dispatch(probs: jnp.ndarray, capacity: int):
     """GShard top-2 dispatch. probs: (G, g, E) f32.
 
-    Returns (dispatch (G,g,E,C) bool, combine (G,g,E,C) f32, aux_loss)."""
+    Returns (dispatch (G,g,E,C) bool, combine (G,g,E,C) f32, aux_loss).
+
+    Aux-loss cotangent convention (docs/training.md): ``aux`` is a
+    first-class output — the graph path exposes it as the ``route`` node's
+    third output and seeds its cotangent explicitly. Its gradient reaches
+    the router logits only through the differentiable ``density_proxy``
+    factor (mean router prob); the one-hot ``density`` factor is
+    piecewise-constant in the logits, so ``jax.vjp`` of this function IS
+    the Switch/GShard straight-through convention — no ``stop_gradient``
+    needed, and the graph-built backward matches autodiff exactly."""
     G, g, E = probs.shape
     idx1 = jnp.argmax(probs, -1)
     mask1 = jax.nn.one_hot(idx1, E, dtype=probs.dtype)

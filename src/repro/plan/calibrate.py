@@ -4,7 +4,7 @@ The UMD multi-node-inference study (PAPERS.md) makes the case that analytic
 cost models are only trustworthy for schedule tuning once their parameters
 are fitted to measurements of the actual platform. Here the measurements are
 the ``benchmarks/sublayer.py`` wall-clock cells committed as
-``$REPRO_BENCH_JSON`` (``BENCH_pr9.json``): each *barrier* cell is rebuilt as
+``$REPRO_BENCH_JSON`` (``BENCH_pr10.json``): each *barrier* cell is rebuilt as
 the very dataflow graph the bench timed (1-block, 2-block period, and the
 microbatch-split period at the ``REPRO_BENCH_TINY`` shapes), lowered through
 :mod:`repro.plan.lower`, and the fabric's effective (``mxu_eff``, ``bw``,
@@ -42,7 +42,7 @@ from repro.core.perfsim import Fabric
 from repro.plan import lower as lower_mod
 
 # max |ln(simulated / measured)| per fitted cell — the documented band
-# (BENCH_pr9.json fits at ≈0.23; the slack absorbs runner timing noise when
+# (BENCH_pr10.json fits at ≈0.23; the slack absorbs runner timing noise when
 # the baseline is regenerated, without letting the fit silently diverge).
 RATIO_TOLERANCE = 0.6
 

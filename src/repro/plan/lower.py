@@ -380,6 +380,18 @@ class Lowering:
                                 self.comp_hints.get(n.name, 0.0),
                                 self._bytes(x), "ar", deps)
                 set_exits(n, t, [x])
+            elif n.op == "bwd_a2a_ffn":
+                # adjoint expert all-to-all: the grad dispatch carries the
+                # send buffer AND the output cotangent (2× the forward
+                # payload per direction), the combine returns the chunk
+                # cotangents; the expert-VJP FLOPs come from comp_hints
+                # (tp._bwd_planner doubles the forward hint for adj. nodes)
+                m = self._bytes(x) + self._bytes(ins[1])
+                t = self._phase(sim, st,
+                                self.comp_hints.get(n.name, 0.0), m,
+                                "ar", deps)
+                set_exits(n, t, [x] + [self.weight_shapes.get(k, x)
+                                       for k in n.weights])
             elif n.op in ("ag_gemm", "ag_gemm_multi"):
                 outs = self._gemm_outs(x, n.weights) or [x]
                 t = self._phase(sim, st, self._gemm_flops(x, n.weights),

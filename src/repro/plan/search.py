@@ -15,6 +15,14 @@ Three decision axes (the knobs the greedy pipeline fixes by heuristic):
 The greedy choice is always in the candidate set (the DFS's first branch at
 every level IS the greedy pick), so the argmin's simulated makespan is ≤ the
 greedy schedule's by construction — the acceptance bar the planner tests pin.
+
+All of this is generic over merged forward+backward training graphs: the
+backward vocabulary (``bwd_ag_gemm``, ``bwd_a2a_ffn``, backward ``gemm_ar``
+/ ``gemm_rs``) lowers through the same bridge, and
+:func:`repro.core.dataflow.asymmetric_candidates` ranks cross-direction
+pairs first (one op downstream of a ``d.*`` cotangent seed, one not), so the
+search naturally overlaps e.g. microbatch-1's backward grad-a2a/RS against
+microbatch-0's forward gathers in an MoE training period.
 """
 from __future__ import annotations
 

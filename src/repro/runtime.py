@@ -35,11 +35,15 @@ class TPConfig:
     ``"auto"`` never splits MoE periods — their aux loss is a per-batch
     statistic the split would change, so that trade-off needs an explicit
     integer opt-in); ``planner`` drives pass 3 of the graph optimizer
-    (``"greedy"`` or ``"perfsim"``); ``graph_backward`` routes training
-    gradients of dense periods through the graph-built custom VJP
+    (``"greedy"`` or ``"perfsim"``); ``graph_backward`` routes period
+    training gradients — dense, MoE (including the routed-expert all-to-all
+    and the aux-loss statistic), and the replicated-activation
+    decode/ragged layout down to S=1 — through the graph-built custom VJP
     (``docs/training.md``) instead of JAX autodiff of the executed forward
     graph — the backward then lowers through the same ``optimize() →
-    execute()`` path and pass 3 can pair forward and backward collectives."""
+    execute()`` path and pass 3 can pair forward and backward collectives.
+    Periods whose graphs carry an op with no declared adjoint fall back to
+    autodiff with a once-per-op-set ``UserWarning``."""
 
     mode: str = "auto"                  # any repro.core.backends name
     sequence_parallel: bool = True      # SP-TP layout (paper's primary)
@@ -47,7 +51,7 @@ class TPConfig:
     bidirectional: bool = True          # asymmetric/bidirectional overlap
     microbatches: Union[int, str] = 1   # period-graph batch split
     planner: str = "greedy"             # pass-3 planner: greedy | perfsim
-    graph_backward: bool = True         # dense-period grads via the graph VJP
+    graph_backward: bool = True         # period grads via the graph VJP
 
 
 # legacy flat Runtime field -> TPConfig field

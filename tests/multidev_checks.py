@@ -664,8 +664,10 @@ def main():
 
     for label, cfg_g, batch_g, mb_g in (
             ("dense", cfg, batch, 2), ("gqa", cfg_gqa2, batch, 2),
-            # an explicit microbatch split changes the MoE aux statistic, so
-            # MoE pins the (autodiff-fallback) unsplit path only
+            # MoE now rides the graph backward THROUGH the IR (route /
+            # a2a_ffn / unroute adjoints with the aux cotangent seeded per
+            # chain) — unsplit (mb=1) only because an explicit microbatch
+            # split changes the aux statistic itself
             ("moe", cfg_moe, bmoe, 1)):
         for mode in ("barrier", "cais"):
             rt_graph = Runtime(
@@ -689,6 +691,70 @@ def main():
         err = max_leaf_err(train_grads(cfg, batch, rt_graph),
                            train_grads(cfg, batch, rt_auto))
         check(f"train_grad.graph_vs_autodiff.remat.{mode}", err, 1e-6)
+
+    # decode/ragged train grads: the replicated-activation layout
+    # (seq_sharded=False — S=1 decode and ragged S % tp != 0 shapes) now
+    # has graph-path adjoints (gemm_col ⇒ grad allreduce through w^T,
+    # gemm_ar ⇒ local dx/dw), so sp_block's graph-built custom VJP must
+    # match the graph_backward=False autodiff of the SAME forward at 1e-6
+    # per backend — graph_backward no longer silently excludes
+    # decode-shaped periods.
+    params_dgr = tr_mod.init_block(jax.random.key(27), "attn", cfg_blk,
+                                   jnp.float32)
+    x_full = jax.random.normal(jax.random.key(28), (2, 8, d), jnp.float32)
+    for s_lab, s_len in (("s1", 1), ("ragged_s3", 3)):
+        xs = x_full[:, :s_len]
+        for mode in ("barrier", "cais"):
+            def dec_grads(graph_bwd):
+                tpc_d = tp_mod.TPContext(mesh=mesh4, backend=mode,
+                                         cais=cais4,
+                                         graph_backward=graph_bwd)
+
+                def f(x_, p_):
+                    out, _ = tp_mod.sp_block(tpc_d, x_, p_, cfg_blk, "attn",
+                                             seq_sharded=False)
+                    # mean, not sum: keep the cotangent O(1) so the 1e-6
+                    # absolute pin measures schedule parity, not loss scale
+                    return jnp.mean(out * out)
+
+                return jax.jit(jax.grad(f, argnums=(0, 1)))(xs, params_dgr)
+
+            check(f"train_grad.decode_gemm_ar.{s_lab}.{mode}",
+                  max_leaf_err(dec_grads(True), dec_grads(False)), 1e-6)
+
+    # dispatch-counter proof: the decode-layout backward allreduces run
+    # through the backend (each gemm_col adjoint dispatches one backend
+    # gemm_ar over the transposed weight), never through implicit psums.
+    ar_bwd = {"n": 0}
+
+    class CountingARCAIS(CAISBackend):
+        name = "cais-count-ar"
+
+        def gemm_ar(self, xl, wl, axis, cc):
+            ar_bwd["n"] += 1
+            return super().gemm_ar(xl, wl, axis, cc)
+
+    register_backend(CountingARCAIS())
+    try:
+        tpc_cnt = tp_mod.TPContext(mesh=mesh4, backend="cais-count-ar",
+                                   cais=cais4, graph_backward=True)
+
+        def f_cnt(x_, p_):
+            out, _ = tp_mod.sp_block(tpc_cnt, x_, p_, cfg_blk, "attn",
+                                     seq_sharded=False)
+            return jnp.sum(out * out)
+
+        jax.grad(f_cnt)(x_full[:, :1], params_dgr)
+        n_total = ar_bwd["n"]
+        ar_bwd["n"] = 0
+        tp_mod.sp_block(tpc_cnt, x_full[:, :1], params_dgr, cfg_blk, "attn",
+                        seq_sharded=False)
+        n_fwd = ar_bwd["n"]
+    finally:
+        unregister_backend("cais-count-ar")
+    # backward trace = forward replay + ≥1 grad-allreduce per projection
+    check("train_grad.decode_gemm_ar.backend_dispatch",
+          0.0 if n_total > n_fwd >= 2 else 1.0)
 
     # ---------------- hierarchical 2D-mesh TP: flat ≡ tp_in × tp_out ------
     # Full-model loss + train grads on a tp_in=2 × tp_out=4 mesh (per-axis
@@ -725,10 +791,12 @@ def main():
                   max_leaf_err(g_flat, g_2d), 1e-6)
 
     # grouped-EP dispatch proof: on the 2D mesh the expert all-to-all must
-    # only ever cross the slow tp_out axis — the hierarchical backend
-    # re-enters a2a_expert_ffn with the concrete leg axis, so every
-    # non-composite axis the backend sees must be tp_out.
+    # only ever cross the slow tp_out axis — forward AND backward: the
+    # hierarchical backend re-enters a2a_expert_ffn / grad_a2a_expert_ffn
+    # with the concrete leg axis, so every non-composite axis the backend
+    # sees must be tp_out (grouped-EP grads stay off the fast tp_in links).
     a2a_axes = []
+    grad_a2a_axes = []
 
     class RecordingCAIS(CAISBackend):
         name = "cais-record"
@@ -737,14 +805,22 @@ def main():
             a2a_axes.append(axis)
             return super().a2a_expert_ffn(send, ffn, axis, cais)
 
+        def grad_a2a_expert_ffn(self, send, gy, bwd_row, axis, cais):
+            grad_a2a_axes.append(axis)
+            return super().grad_a2a_expert_ffn(send, gy, bwd_row, axis,
+                                               cais)
+
     register_backend(RecordingCAIS())
     try:
         rt_rec = Runtime(compute_dtype="float32", remat=False, loss_chunk=16,
-                         tp=TPConfig(mode="cais-record", chunks=2))
+                         tp=TPConfig(mode="cais-record", chunks=2,
+                                     graph_backward=True))
         model_rec = build_model(cfg_moe8, rt_rec)
         params_rec = model_rec.init(jax.random.key(0))
         with sharding.use_mesh(mesh_2d):
-            l_rec = float(jax.jit(model_rec.loss)(params_rec, bmoe))
+            l_rec, g_rec = jax.jit(jax.value_and_grad(model_rec.loss))(
+                params_rec, bmoe)
+            l_rec = float(l_rec)
     finally:
         unregister_backend("cais-record")
     rt_ref = Runtime(compute_dtype="float32", remat=False, loss_chunk=16,
@@ -752,12 +828,25 @@ def main():
     model_ref = build_model(cfg_moe8, rt_ref)
     params_ref = model_ref.init(jax.random.key(0))
     with sharding.use_mesh(mesh_2d):
-        l_ref = float(jax.jit(model_ref.loss)(params_ref, bmoe))
+        l_ref, g_ref = jax.jit(jax.value_and_grad(model_ref.loss))(
+            params_ref, bmoe)
+        l_ref = float(l_ref)
     concrete = [a for a in a2a_axes if not isinstance(a, tuple)]
+    concrete_g = [a for a in grad_a2a_axes if not isinstance(a, tuple)]
     check("grouped_ep.dispatch.parity", abs(l_rec - l_ref), 1e-6)
+    check("grouped_ep.dispatch.parity.train_grad",
+          max_leaf_err(g_rec, g_ref), 1e-6)
     check("grouped_ep.dispatch.tp_out_only",
           0.0 if (concrete
                   and all(a == sharding.TP_OUT_AXIS for a in concrete))
+          else 1.0)
+    # the backward a2a runs through the backend (dispatch-counter proof)
+    # and its concrete legs stay off tp_in under grouped EP too
+    check("grouped_ep.grad_dispatch.through_backend",
+          0.0 if len(grad_a2a_axes) >= 1 else 1.0)
+    check("grouped_ep.grad_dispatch.tp_out_only",
+          0.0 if (concrete_g
+                  and all(a == sharding.TP_OUT_AXIS for a in concrete_g))
           else 1.0)
 
     # ---------------- elastic resharding across meshes --------------------

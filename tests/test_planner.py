@@ -15,7 +15,7 @@ from repro.plan import (CalibrationResult, PerfsimPlanner, PlanCache,
 FABRIC = Fabric(n=8)
 
 BENCH_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
-                          "BENCH_pr9.json")
+                          "BENCH_pr10.json")
 
 
 def _pass2(g):

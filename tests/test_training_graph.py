@@ -233,15 +233,20 @@ def test_forward_only_pairing_unchanged():
 
 
 def test_supports_backward_gating():
-    """Ops without a declared adjoint (MoE routing, gemm_ar) gate the graph
-    backward off; build_training_graph refuses them loudly."""
+    """Ops without a declared adjoint gate the graph backward off;
+    build_training_graph refuses them loudly. Since PR 10 the replicated
+    decode layout (gemm_col/gemm_ar) and the MoE ops (route/a2a_ffn/unroute)
+    are IN the vocabulary — only raw collectives and pass-3 outputs gate."""
     g = tp.dense_period_graph([_toy_core, _toy_core], True, "silu")
     assert df.supports_backward(_pass2(g))
     g_ar = df.Graph([df.Node("x", "input"),
                      df.Node("y", "gemm_ar", ("x",), ("w",))], ("y",))
-    assert not df.supports_backward(g_ar)
+    assert df.supports_backward(g_ar)
+    g_raw = df.Graph([df.Node("x", "input"),
+                      df.Node("y", "allreduce", ("x",))], ("y",))
+    assert not df.supports_backward(g_raw)
     with pytest.raises(df.GraphError, match="supports_backward"):
-        df.build_training_graph(g_ar)
+        df.build_training_graph(g_raw)
     # pass-3 output (overlap_asym) is also out of vocabulary: the backward
     # is built from the PRE-pass-3 graph, then optimized as one
     opt = df.optimize(df.dual_sublayer_graph())
